@@ -1,0 +1,62 @@
+"""§VI / Eq. 4–5 — hashed-key collision discovery vs the birthday bound.
+
+The paper found 163 colliding InChIKeys among 176.9 M entries (~10× the
+n²/2h ≈ 15.7 expectation) and migrated to full InChI.  At benchmark scale
+(n ≈ 3.2e4) the paper's 50-bit key space yields E ≈ 0 collisions — as
+theory demands — so we sweep the effective key width downward and verify
+measured collision counts track the birthday bound, which is the same
+validation the paper ran at fixed h with 5,500× our n.  The sweep also
+exercises the *discovery machinery* end-to-end: Algorithm 3's defensive
+verification catches the collisions as extraction mismatches.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.baseline import naive_scan
+from repro.core.collisions import birthday_expectation, scan_corpus
+from repro.core.extract import extract
+from repro.core.index import build_index
+from repro.core.sdfgen import db_id_list
+
+from .common import bench_store, row, timeit
+
+KEY_BITS_SWEEP = (16, 20, 24, 28, 50)
+
+
+def run() -> List[str]:
+    store, spec = bench_store()
+    out = []
+    for bits in KEY_BITS_SWEEP:
+        t, rep = timeit(lambda b=bits: scan_corpus(store, key_bits=b))
+        e = birthday_expectation(rep.n_records, bits)
+        out.append(row(
+            f"eq45.scan[{bits}b]", t,
+            f"{rep.n_colliding_keys} colliding keys / "
+            f"{rep.n_affected_records} records; E[n²/2h]={e:.2f}; "
+            f"rate {rep.empirical_rate:.2e}",
+        ))
+
+    # end-to-end discovery: hashed-key pipeline at a collision-prone width
+    bits = 24
+    store24, spec24 = bench_store(key_bits=bits)
+    idx = build_index(store24, key_mode="hashed_key", key_bits=bits)
+    targets = db_id_list(spec24, "chembl")
+    t_ex, res = timeit(lambda: extract(store24, idx, targets, key_bits=bits))
+    out.append(row(
+        "eq45.verification_catches", t_ex,
+        f"extract found {res.found}, verification mismatches "
+        f"{len(res.mismatches)} (the paper's §VI.A discovery path); "
+        f"index shadowed keys {idx.stats.n_duplicate_keys}",
+    ))
+
+    # migration: full-id pipeline has zero mismatches by construction
+    idx_full = build_index(store24, key_mode="full_id")
+    t_fx, res_full = timeit(lambda: extract(store24, idx_full, targets))
+    out.append(row(
+        "eq45.migration_full_id", t_fx,
+        f"found {res_full.found}, mismatches {len(res_full.mismatches)} "
+        f"(deterministic uniqueness — paper §VI.C)",
+    ))
+    return out

@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness convention) covering:
+
+  Table I   — baseline scan throughput + Eq. 2/3 projection
+  Table II  — baseline vs indexed speedup (740× headline)
+  Table III — storage / RAM / disk-I/O-volume trade-offs
+  Table IV  — hashed-key vs full-id identifier strategies
+  Eq. 4/5   — collision counts vs birthday bound + §VI discovery/migration
+  Fig. 2    — runtime scaling and baseline/index crossover
+  kernels   — TPU-adapted hot-loop throughput (hash_mix, sorted_probe)
+
+Corpus scale via REPRO_BENCH_FILES / REPRO_BENCH_RPF env vars.
+Roofline numbers come from the dry-run (results/dryrun.jsonl), not here.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (
+        collisions_eq45,
+        fig2_scaling,
+        kernels_tpu,
+        table1_scan,
+        table2_speedup,
+        table3_resources,
+        table4_identifiers,
+    )
+
+    modules = [
+        ("table1", table1_scan),
+        ("table2", table2_speedup),
+        ("table3", table3_resources),
+        ("table4", table4_identifiers),
+        ("eq45", collisions_eq45),
+        ("fig2", fig2_scaling),
+        ("kernels", kernels_tpu),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        t0 = time.perf_counter()
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}", flush=True)
+        print(
+            f"{name}.total,{(time.perf_counter()-t0)*1e6:.0f},",
+            flush=True,
+        )
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Table I — baseline scan throughput on representative files.
+
+The paper scanned 3 representative PubChem files (smallest/median/largest)
+and found throughput constant across sizes (CoV 4.7%), validating that the
+naïve algorithm's cost is linear in bytes and the bottleneck algorithmic.
+We reproduce the measurement and the CoV check, then project Eq. 2/3.
+"""
+
+from __future__ import annotations
+
+import statistics
+from typing import List
+
+from repro.core.baseline import estimate_runtime, measure_scan_throughput
+
+from .common import (
+    PAPER_N_FILES,
+    PAPER_N_TARGETS,
+    PAPER_RECORDS_PER_FILE,
+    bench_store,
+    row,
+)
+
+
+def run() -> List[str]:
+    store, spec = bench_store()
+    samples = measure_scan_throughput(store, n_files=3)
+    out = []
+    rates = []
+    for s in samples:
+        rates.append(s.records_per_second)
+        out.append(
+            row(
+                f"table1.scan[{s.file}]",
+                s.seconds,
+                f"{s.records_per_second:.0f} mol/s; {s.file_bytes/1e6:.1f} MB",
+            )
+        )
+    mean_rate = statistics.mean(rates)
+    cov = statistics.pstdev(rates) / mean_rate if mean_rate else 0.0
+    out.append(
+        row("table1.mean", statistics.mean(s.seconds for s in samples),
+            f"{mean_rate:.0f} mol/s mean; CoV {cov*100:.1f}% (paper: 4.7%)")
+    )
+    # Eq. 2/3: project paper-scale brute force.  The paper's op count is
+    # N×M×S *comparisons*; dividing it by the measured *comparison* rate
+    # (list-membership tests/s from a short Algorithm-1 run) reproduces the
+    # 100-day order.  (Reproduction note, EXPERIMENTS.md: Eq. 3 as printed
+    # divides 8.4e13 by 3,200·3,600 which yields 7.3e6 hours, not 7,291 —
+    # the comparison-rate reading is the self-consistent one.)
+    from repro.core.baseline import naive_scan
+    from repro.core.sdfgen import db_id_list
+
+    targets = db_id_list(spec, "chembl")[:300]
+    res = naive_scan(store, targets, "list", max_files=1)
+    cmp_rate = res.comparisons / max(res.seconds, 1e-9)
+    ops, _ = estimate_runtime(
+        PAPER_N_TARGETS, PAPER_N_FILES, PAPER_RECORDS_PER_FILE, cmp_rate, "list"
+    )
+    secs = ops / cmp_rate
+    out.append(
+        row(
+            "table1.eq2_eq3_projection",
+            secs,
+            f"{ops:.3e} cmps at {cmp_rate:.2e} cmp/s → {secs/86400:.0f} days "
+            f"(paper: 8.4e13 ops, 100+ days / 4–6 months practical)",
+        )
+    )
+    return out

@@ -1,0 +1,88 @@
+"""Table II — baseline vs index-based extraction (the 740× headline).
+
+Measured end-to-end at benchmark scale: naïve scan (Algorithm 1, both the
+paper's list-membership variant and the set fix), index construction
+(Algorithm 2), initial extraction and re-extraction (Algorithm 3, no
+rebuild).  Paper-scale speedup is then projected through the validated
+complexity model (the paper's own Eq. 2/3 methodology): at N=477,123
+targets the projected naïve runtime is months while index+extract stays
+at hours — the 740× figure falls out of the same arithmetic.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.baseline import estimate_runtime, naive_scan
+from repro.core.extract import extract
+from repro.core.index import build_index
+from repro.core.sdfgen import db_id_list
+from repro.core.intersect import intersect_host
+
+from .common import (
+    PAPER_N_FILES,
+    PAPER_N_TARGETS,
+    PAPER_RECORDS_PER_FILE,
+    bench_store,
+    row,
+    timeit,
+)
+
+
+def run() -> List[str]:
+    store, spec = bench_store()
+    out = []
+
+    # targets = ChEMBL∩eMolecules role (with ids absent from "pubchem")
+    b = db_id_list(spec, "chembl", extra_outside=25)
+    c = db_id_list(spec, "emolecules", extra_outside=25)
+    inter = intersect_host(b, c)
+    targets = inter.ids
+    out.append(row("table2.chembl_x_emolecules", inter.seconds,
+                   f"{inter.count} targets (paper: 477,123 in 2.5 h)"))
+
+    t_list, res_list = timeit(lambda: naive_scan(store, targets, "list"))
+    out.append(row("table2.baseline_list_scan", t_list,
+                   f"found {len(res_list.records)}; {res_list.comparisons:.2e} cmps"))
+    t_set, res_set = timeit(lambda: naive_scan(store, targets, "set"))
+    out.append(row("table2.baseline_set_scan", t_set,
+                   f"found {len(res_set.records)}"))
+
+    t_idx, idx = timeit(lambda: build_index(store, key_mode="full_id"))
+    out.append(row("table2.index_construction", t_idx,
+                   f"{len(idx)} entries (paper: 11.7 h once)"))
+
+    t_ex1, res1 = timeit(lambda: extract(store, idx, targets))
+    out.append(row("table2.initial_extraction", t_ex1,
+                   f"found {res1.found}, missing {len(res1.missing)} "
+                   f"(paper: 3.2 h, 435,413 found)"))
+
+    # re-extraction with modified criteria — no index rebuild
+    targets2 = targets[: max(1, len(targets) * 9 // 10)]
+    t_ex2, res2 = timeit(lambda: extract(store, idx, targets2))
+    out.append(row("table2.re_extraction", t_ex2,
+                   f"found {res2.found} (paper: 2.8 h, no rebuild)"))
+
+    sp1 = t_list / t_ex1 if t_ex1 > 0 else float("inf")
+    out.append(row("table2.measured_speedup", 0.0,
+                   f"{sp1:.0f}x at N={len(targets)} (list-baseline / extraction)"))
+
+    # paper-scale projection through the complexity model.  Naive time uses
+    # the measured *comparison* rate (see table1 note); extraction time uses
+    # the paper's own per-target seek cost (3.2 h / 477k ≈ 24 ms on cold
+    # HDD) alongside our measured per-target cost (page-cached SSD).
+    cmp_rate = res_list.comparisons / max(t_list, 1e-9)
+    ops, _ = estimate_runtime(
+        PAPER_N_TARGETS, PAPER_N_FILES, PAPER_RECORDS_PER_FILE, cmp_rate, "list"
+    )
+    t_naive_paper = ops / cmp_rate
+    per_target = t_ex1 / max(res1.found, 1)
+    t_extract_paper = per_target * PAPER_N_TARGETS
+    out.append(row(
+        "table2.paper_scale_projection", 0.0,
+        f"naive {t_naive_paper/86400:.0f} d vs extract "
+        f"{t_extract_paper/3600:.2f} h (our per-target {per_target*1e3:.2f} ms, "
+        f"page-cached; paper 24 ms cold-HDD → 3.2 h) → "
+        f"{t_naive_paper/max(t_extract_paper,1e-9):.0f}x vs paper 740x",
+    ))
+    return out

@@ -1,0 +1,72 @@
+"""Table III — system resource requirements: storage, RAM, disk I/O volume.
+
+The paper's deepest point: the index wins primarily on **I/O volume**
+(168.9 TB of repeated scans → one 177 MB targeted read pass; −99.7%), at
+the cost of RAM (index resident: 2× raw CSV size from dict overhead) and
++0.44% persistent storage.  All three are measured here at benchmark scale
+and compared against the paper's figures.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+from pathlib import Path
+from typing import List
+
+from repro.core.baseline import naive_scan
+from repro.core.extract import extract
+from repro.core.index import build_index
+from repro.core.intersect import intersect_host
+from repro.core.sdfgen import db_id_list
+
+from .common import bench_store, row, timeit
+
+
+def _index_ram_bytes(idx) -> int:
+    """Approximate resident size of the in-memory index dict."""
+    total = sys.getsizeof(idx.entries)
+    for k, (f, o) in idx.entries.items():
+        total += sys.getsizeof(k) + sys.getsizeof(f) + sys.getsizeof(o) + 64
+    return total
+
+
+def run() -> List[str]:
+    store, spec = bench_store()
+    out = []
+    corpus_bytes = store.total_bytes()
+
+    b = db_id_list(spec, "chembl", extra_outside=25)
+    c = db_id_list(spec, "emolecules", extra_outside=25)
+    targets = intersect_host(b, c).ids
+
+    # baseline I/O volume: bytes scanned by the naive pass
+    _, res_list = timeit(lambda: naive_scan(store, targets, "set"))
+    baseline_io = res_list.bytes_scanned
+
+    idx = build_index(store, key_mode="full_id")
+    with tempfile.TemporaryDirectory() as td:
+        csv_path = Path(td) / "index.csv"
+        csv_bytes = idx.save_csv(csv_path)
+    ram_bytes = _index_ram_bytes(idx)
+
+    _, res = timeit(lambda: extract(store, idx, targets))
+    indexed_io = res.bytes_read
+
+    avg_rec = corpus_bytes / max(len(idx), 1)
+    out.append(row("table3.persistent_storage", 0.0,
+                   f"corpus {corpus_bytes/1e6:.1f} MB + index "
+                   f"{csv_bytes/1e6:.2f} MB = +{csv_bytes/corpus_bytes*100:.2f}% "
+                   f"(paper: +0.44%; ratio scales as id_len/record_len — "
+                   f"our records avg {avg_rec:.0f} B vs paper ~18 kB)"))
+    out.append(row("table3.peak_ram", 0.0,
+                   f"index resident {ram_bytes/1e6:.1f} MB "
+                   f"= {ram_bytes/max(csv_bytes,1):.1f}x raw CSV "
+                   f"(paper: 28.3 GB ≈ 2x 14 GB)"))
+    out.append(row("table3.disk_io_volume", 0.0,
+                   f"baseline {baseline_io/1e6:.1f} MB scanned vs indexed "
+                   f"{indexed_io/1e6:.3f} MB read "
+                   f"= -{(1 - indexed_io/max(baseline_io,1))*100:.2f}% "
+                   f"(paper: -99.7%); note baseline here is ONE set-scan — "
+                   f"the paper's figure multiplies by re-extraction count"))
+    return out

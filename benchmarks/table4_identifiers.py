@@ -1,0 +1,82 @@
+"""Table IV — identifier strategy comparison: hashed key vs full id.
+
+The §VI.C migration quantified: average key length, collision guarantee,
+index size (CSV on disk), in-memory size, and lookup latency for the
+27-char hashed key (InChIKey role) vs the full canonical id (full-InChI
+role).  The paper accepted +27 % storage and +50 % lookup latency for
+deterministic uniqueness; we measure the same columns.
+"""
+
+from __future__ import annotations
+
+import statistics
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import List
+
+from repro.core.identifiers import hashed_key
+from repro.core.index import build_index
+from repro.core.sdfgen import db_id_list
+
+from .common import bench_store, row, timeit
+
+
+def _ram(idx) -> int:
+    total = sys.getsizeof(idx.entries)
+    for k, v in idx.entries.items():
+        total += sys.getsizeof(k) + sys.getsizeof(v[0]) + sys.getsizeof(v[1]) + 64
+    return total
+
+
+def _lookup_latency(idx, keys, repeats: int = 5) -> float:
+    t0 = time.perf_counter()
+    n = 0
+    for _ in range(repeats):
+        for k in keys:
+            # fresh string objects: defeat CPython's per-object hash cache so
+            # the measured cost includes hashing the key (the paper's 0.8 vs
+            # 1.2 µs difference is exactly the key-length hashing cost)
+            idx.lookup(str(bytes(k, "ascii"), "ascii"))
+            n += 1
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> List[str]:
+    store, spec = bench_store()
+    out = []
+    ids = db_id_list(spec, "chembl")
+    sample = ids[:2000]
+
+    results = {}
+    for mode in ("hashed_key", "full_id"):
+        t_build, idx = timeit(lambda m=mode: build_index(store, key_mode=m))
+        with tempfile.TemporaryDirectory() as td:
+            size = idx.save_csv(Path(td) / "ix.csv")
+        keys = (
+            [hashed_key(i, spec.key_bits) for i in sample]
+            if mode == "hashed_key"
+            else sample
+        )
+        lat = _lookup_latency(idx, keys)
+        keylen = statistics.mean(
+            len(k) for k in list(idx.entries.keys())[:1000]
+        )
+        results[mode] = (size, _ram(idx), lat, keylen)
+        out.append(row(
+            f"table4.{mode}", lat,
+            f"keylen {keylen:.0f} ch; index {size/1e6:.2f} MB; "
+            f"ram {_ram(idx)/1e6:.1f} MB; build {t_build:.2f} s",
+        ))
+
+    hs, hr, hl, hk = results["hashed_key"]
+    fs, fr, fl, fk = results["full_id"]
+    out.append(row(
+        "table4.overhead_full_vs_hashed", 0.0,
+        f"index +{(fs/hs-1)*100:.0f}% (paper +27%); "
+        f"ram +{(fr/hr-1)*100:.0f}%; lookup {fl/hl:.2f}x "
+        f"(paper 1.5x: 1.2 vs 0.8 µs); "
+        f"guarantee: deterministic vs probabilistic",
+    ))
+    return out

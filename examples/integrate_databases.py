@@ -1,0 +1,86 @@
+"""Full paper narrative: hashed-key pipeline → collision discovery →
+migration to collision-free full ids (§VI).
+
+Runs the integration twice: first keyed by the 27-char hashed key at a
+collision-prone effective width (so the hundred-million-scale phenomenon
+is observable at demo scale), watching Algorithm 3's defensive
+verification catch the collisions; then migrated to full canonical ids,
+verifying zero mismatches.  Ends with the Eq. 4/5 birthday-bound analysis.
+
+    PYTHONPATH=src python examples/integrate_databases.py [--records 24000]
+"""
+
+import argparse
+import tempfile
+from pathlib import Path
+
+from repro.core import (
+    RecordStore,
+    birthday_expectation,
+    build_index,
+    extract,
+    intersect_host,
+    scan_corpus,
+)
+from repro.core.sdfgen import CorpusSpec, db_id_list, generate_corpus
+
+KEY_BITS = 22  # collision-prone at demo scale (E[collisions] = n²/2^23)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", type=int, default=24_000)
+    ap.add_argument("--files", type=int, default=6)
+    args = ap.parse_args()
+
+    spec = CorpusSpec(
+        n_files=args.files,
+        records_per_file=args.records // args.files,
+        key_bits=KEY_BITS,
+    )
+    root = Path(tempfile.mkdtemp()) / "corpus"
+    print(f"corpus: {spec.n_records} records, hashed keys truncated to "
+          f"{KEY_BITS} bits (models the paper's 1e15 space at 177M records)")
+    generate_corpus(root, spec)
+    store = RecordStore(root)
+
+    targets = intersect_host(
+        db_id_list(spec, "chembl"), db_id_list(spec, "emolecules")
+    ).ids
+    print(f"targets (ChEMBL∩eMolecules role): {len(targets)}")
+
+    # ---- phase 1: hashed-key pipeline (pre-§VI.C) --------------------------
+    print("\n— phase 1: index keyed by hashed 27-char key —")
+    idx_h = build_index(store, key_mode="hashed_key", key_bits=KEY_BITS)
+    print(f"  index entries {len(idx_h)}, shadowed duplicate keys "
+          f"{idx_h.stats.n_duplicate_keys} (collisions silently shadow records!)")
+    res_h = extract(store, idx_h, targets, key_bits=KEY_BITS)
+    print(f"  extraction: found {res_h.found}, verification MISMATCHES "
+          f"{len(res_h.mismatches)}  ← the §VI.A discovery moment")
+    for m in res_h.mismatches[:3]:
+        print(f"    key {m.lookup_key} fetched a structurally different "
+              f"molecule at {m.file}:{m.offset}")
+
+    # ---- phase 2: systematic collision scan (§VI.B) ------------------------
+    print("\n— phase 2: systematic full-corpus collision scan —")
+    rep = scan_corpus(store, key_bits=KEY_BITS)
+    e = birthday_expectation(rep.n_records, KEY_BITS)
+    print(f"  {rep.n_colliding_keys} colliding keys affecting "
+          f"{rep.n_affected_records} records; birthday bound E={e:.1f} "
+          f"(paper: 163 observed vs E=15.7 at their scale)")
+    print(f"  empirical rate {rep.empirical_rate:.2e} (paper Eq.4: 1.84e-6)")
+
+    # ---- phase 3: migration to full ids (§VI.C) ----------------------------
+    print("\n— phase 3: migrated pipeline (full canonical ids) —")
+    idx_f = build_index(store, key_mode="full_id")
+    res_f = extract(store, idx_f, targets)
+    print(f"  extraction: found {res_f.found}, mismatches "
+          f"{len(res_f.mismatches)} (deterministic uniqueness)")
+    assert len(res_f.mismatches) == 0
+    assert res_f.found >= res_h.found
+    print("\nmigration recovered every record the hashed pipeline lost — "
+          "the paper's conclusion, reproduced")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Checkpointing with a byte-offset catalog — the paper's architecture
+reapplied to training state.
+
+On-disk layout per checkpoint::
+
+    <dir>/step_00000042/
+        shard_00000.bin     # every tensor's raw bytes, concatenated
+        catalog.csv         # name, byte_offset, nbytes, dtype, shape, digest
+        meta.json           # step, tree structure, framework versions
+
+Exactly the paper's design points, transplanted:
+
+* **byte-offset catalog** → O(1) ``seek()`` restore of any single tensor
+  (partial restores for elastic resharding or tensor surgery never read
+  the whole shard file);
+* **CSV catalog** for the same reasons the paper chose CSV for its index
+  (§IV.B): debuggable, greppable, language-neutral;
+* **defensive verification** (Algorithm 3 lines 8–12): every restored
+  tensor's blake2b digest is recomputed and compared to the catalog —
+  index corruption or torn writes are detected, not propagated;
+* **atomic publish**: tmp-dir + ``os.replace`` rename, so a crash mid-save
+  never yields a half-checkpoint that restore could pick up.
+
+Saves can run asynchronously (background thread snapshots host copies);
+``keep_last`` retention prunes old steps.
+"""
+
+from __future__ import annotations
+
+import csv
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+
+__all__ = ["CheckpointManager", "CatalogEntry", "save_pytree", "restore_pytree"]
+
+PyTree = Any
+_CATALOG_HEADER = ["name", "byte_offset", "nbytes", "dtype", "shape", "digest"]
+
+
+def _flatten_with_names(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def _digest(buf: bytes) -> str:
+    return hashlib.blake2b(buf, digest_size=16).hexdigest()
+
+
+@dataclass(frozen=True)
+class CatalogEntry:
+    name: str
+    byte_offset: int
+    nbytes: int
+    dtype: str
+    shape: Tuple[int, ...]
+    digest: str
+
+
+def save_pytree(tree: PyTree, directory: Path, meta: Optional[dict] = None) -> Path:
+    """Write one catalog checkpoint (atomic)."""
+    directory = Path(directory)
+    tmp = directory.with_name(directory.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    entries: List[CatalogEntry] = []
+    offset = 0
+    with open(tmp / "shard_00000.bin", "wb") as f:
+        for name, arr in _flatten_with_names(tree):
+            buf = arr.tobytes()
+            f.write(buf)
+            entries.append(
+                CatalogEntry(
+                    name, offset, len(buf), str(arr.dtype),
+                    tuple(arr.shape), _digest(buf),
+                )
+            )
+            offset += len(buf)
+    with open(tmp / "catalog.csv", "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(_CATALOG_HEADER)
+        for e in entries:
+            w.writerow(
+                [e.name, e.byte_offset, e.nbytes, e.dtype,
+                 json.dumps(list(e.shape)), e.digest]
+            )
+    (tmp / "meta.json").write_text(json.dumps(meta or {}, indent=1))
+    if directory.exists():
+        shutil.rmtree(directory)
+    os.replace(tmp, directory)  # atomic publish
+    return directory
+
+
+def load_catalog(directory: Path) -> Dict[str, CatalogEntry]:
+    out: Dict[str, CatalogEntry] = {}
+    with open(Path(directory) / "catalog.csv", newline="") as f:
+        r = csv.reader(f)
+        header = next(r)
+        if header != _CATALOG_HEADER:
+            raise ValueError(f"bad catalog header {header}")
+        for name, off, nb, dt, shp, dg in r:
+            out[name] = CatalogEntry(
+                name, int(off), int(nb), dt, tuple(json.loads(shp)), dg
+            )
+    return out
+
+
+def read_tensor(directory: Path, entry: CatalogEntry, verify: bool = True) -> np.ndarray:
+    """O(1) single-tensor restore: seek to the catalog offset and read."""
+    with open(Path(directory) / "shard_00000.bin", "rb") as f:
+        f.seek(entry.byte_offset)
+        buf = f.read(entry.nbytes)
+    if verify and _digest(buf) != entry.digest:
+        raise IOError(
+            f"checkpoint integrity failure for {entry.name!r} "
+            f"(digest mismatch — corrupted shard or stale catalog)"
+        )
+    return np.frombuffer(buf, dtype=np.dtype(entry.dtype)).reshape(entry.shape)
+
+
+def restore_pytree(tree_like: PyTree, directory: Path, verify: bool = True) -> PyTree:
+    """Restore into the structure of ``tree_like`` (names must match)."""
+    catalog = load_catalog(directory)
+    names = [n for n, _ in _flatten_with_names(tree_like)]
+    missing = [n for n in names if n not in catalog]
+    if missing:
+        raise KeyError(f"checkpoint missing tensors: {missing[:5]}…")
+    # offset-sorted read order: the paper's sequential-access optimization
+    order = sorted(names, key=lambda n: catalog[n].byte_offset)
+    loaded: Dict[str, np.ndarray] = {}
+    with open(Path(directory) / "shard_00000.bin", "rb") as f:
+        for n in order:
+            e = catalog[n]
+            f.seek(e.byte_offset)
+            buf = f.read(e.nbytes)
+            if verify and _digest(buf) != e.digest:
+                raise IOError(f"integrity failure for {n!r}")
+            loaded[n] = np.frombuffer(buf, np.dtype(e.dtype)).reshape(e.shape)
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    return jax.tree_util.tree_unflatten(
+        treedef, [loaded[n] for n in names]
+    )
+
+
+class CheckpointManager:
+    """Async, retained, resumable checkpoints."""
+
+    def __init__(self, root: Path, keep_last: int = 3):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self._pending: Optional[threading.Thread] = None
+
+    def _dir_for(self, step: int) -> Path:
+        return self.root / f"step_{step:08d}"
+
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.root.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, tree: PyTree, meta: Optional[dict] = None,
+             blocking: bool = True) -> None:
+        # snapshot to host memory first (device buffers may be donated next step)
+        host = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+        meta = dict(meta or {}, step=step, time=time.time())
+
+        def work():
+            save_pytree(host, self._dir_for(step), meta)
+            self._prune()
+
+        if blocking:
+            work()
+        else:
+            self.wait()
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore(self, tree_like: PyTree, step: Optional[int] = None) -> Tuple[int, PyTree]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        tree = restore_pytree(tree_like, self._dir_for(step))
+        return step, tree
+
+    def restore_tensor(self, step: int, name: str) -> np.ndarray:
+        """Partial restore: one tensor via its catalog offset (O(1) seek)."""
+        d = self._dir_for(step)
+        catalog = load_catalog(d)
+        return read_tensor(d, catalog[name])
+
+    def _prune(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(self._dir_for(s), ignore_errors=True)

@@ -1,0 +1,61 @@
+"""The paper's primary contribution: the byte-offset indexing architecture.
+
+Phase 1 (index construction, Algorithm 2)  → :mod:`repro.core.index`
+Phase 2 (targeted extraction, Algorithm 3) → :mod:`repro.core.extract`
+Baseline (naïve scan, Algorithm 1)         → :mod:`repro.core.baseline`
+Identifier layer (InChI/InChIKey roles)    → :mod:`repro.core.identifiers`
+Collision discovery (§VI, Eq. 4/5)         → :mod:`repro.core.collisions`
+Multi-source intersection (Eq. 1)          → :mod:`repro.core.intersect`
+Record substrate (SDF dialect)             → :mod:`repro.core.records`
+Synthetic corpus (scale model of PubChem)  → :mod:`repro.core.sdfgen`
+TPU packing layer (ids → uint32 lanes)     → :mod:`repro.core.packing`
+"""
+
+from .baseline import BaselineResult, estimate_runtime, measure_scan_throughput, naive_scan
+from .collisions import (
+    CollisionReport,
+    birthday_expectation,
+    collisions_from_pairs,
+    scan_corpus,
+    scan_pairs_sorted,
+)
+from .extract import ExtractionResult, Mismatch, extract, plan_extraction
+from .identifiers import (
+    DEFAULT_KEY_BITS,
+    PAPER_KEY_BITS,
+    Molecule,
+    canonical_id,
+    canonical_id_from_structure,
+    hashed_key,
+    molecule_from_cid,
+)
+from .index import (
+    BinaryIndex,
+    ByteOffsetIndex,
+    IndexStats,
+    build_index,
+    file_fingerprints,
+    update_index,
+)
+from .intersect import IntersectionResult, intersect_host, intersect_sorted
+from .packing import lanes_for, pack_ids, unpack_ids
+from .records import (
+    RECORD_DELIM,
+    RecordStore,
+    extract_property,
+    iter_record_offsets,
+    iter_records,
+    read_record_at,
+    record_properties,
+)
+from .sdfgen import (
+    CorpusManifest,
+    CorpusSpec,
+    db_id_list,
+    db_membership,
+    generate_corpus,
+    ground_truth_final_dataset,
+    ground_truth_intersection,
+    load_manifest,
+    record_text_for_cid,
+)

@@ -1,0 +1,153 @@
+"""Algorithm 1 — the paper's naïve nested-scan baseline.
+
+Implemented exactly as published (§III.B): iterate files, scan every
+record, test the record's identifier against the remaining-target
+collection, stop early when all targets are found.  Two membership
+variants are provided:
+
+* ``membership="list"`` — the paper's pseudo-code uses a *list* of targets
+  (``M ← T``, ``current_inchi ∈ M``), giving the O(N×M×S) complexity the
+  paper analyses and projects to 100+ days.
+* ``membership="set"``  — the obvious O(1)-membership fix.  Even with it,
+  every (re-)extraction re-reads the entire corpus (the paper's Table III
+  I/O argument: 168.9 TB baseline vs 177 MB indexed) — the index still
+  wins on I/O volume, which is the paper's deeper point.
+
+``estimate_runtime`` reproduces Eq. 2/3: project full-scale runtime from a
+measured throughput sample, which is how the paper justified abandoning
+the brute-force path after scanning only 3 representative files.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .records import RecordStore, extract_property, iter_records
+from .sdfgen import PROP_ID
+
+__all__ = ["BaselineResult", "naive_scan", "estimate_runtime", "measure_scan_throughput"]
+
+
+@dataclass
+class BaselineResult:
+    records: Dict[str, str] = field(default_factory=dict)  # id -> record text
+    missing: Set[str] = field(default_factory=set)
+    files_scanned: int = 0
+    records_scanned: int = 0
+    bytes_scanned: int = 0
+    seconds: float = 0.0
+    comparisons: int = 0  # membership-test operation count (Eq. 2 analogue)
+
+
+def naive_scan(
+    store: RecordStore,
+    targets: Sequence[str],
+    membership: str = "list",
+    max_files: Optional[int] = None,
+) -> BaselineResult:
+    """Algorithm 1: scan files until every target is found (or files end)."""
+    if membership not in ("list", "set"):
+        raise ValueError(membership)
+    res = BaselineResult()
+    remaining_list: List[str] = list(targets)
+    remaining_set: Set[str] = set(targets)
+    t0 = time.perf_counter()
+    files = store.files()
+    if max_files is not None:
+        files = files[:max_files]
+    for path in files:
+        if not remaining_set:
+            break
+        res.files_scanned += 1
+        res.bytes_scanned += path.stat().st_size
+        for _offset, text in iter_records(path):
+            res.records_scanned += 1
+            rid = extract_property(text, PROP_ID)
+            if rid is None:
+                continue
+            if membership == "list":
+                # Paper-faithful: linear membership over the target list.
+                res.comparisons += len(remaining_list)
+                hit = rid in remaining_list
+            else:
+                res.comparisons += 1
+                hit = rid in remaining_set
+            if hit and rid in remaining_set:
+                res.records[rid] = text
+                remaining_set.discard(rid)
+                if membership == "list":
+                    remaining_list.remove(rid)
+                if not remaining_set:
+                    break
+    res.missing = remaining_set
+    res.seconds = time.perf_counter() - t0
+    return res
+
+
+@dataclass
+class ThroughputSample:
+    file: str
+    file_bytes: int
+    records: int
+    seconds: float
+
+    @property
+    def records_per_second(self) -> float:
+        return self.records / self.seconds if self.seconds > 0 else float("inf")
+
+
+def measure_scan_throughput(
+    store: RecordStore, n_files: int = 3
+) -> List[ThroughputSample]:
+    """Table I analogue: scan representative files, measure mol/s."""
+    files = store.files()
+    if not files:
+        return []
+    # representative spread: smallest, median, largest by size
+    by_size = sorted(files, key=lambda p: p.stat().st_size)
+    picks: List[Path] = []
+    for frac in (0.0, 0.5, 1.0):
+        p = by_size[min(int(frac * (len(by_size) - 1)), len(by_size) - 1)]
+        if p not in picks:
+            picks.append(p)
+    samples: List[ThroughputSample] = []
+    for path in picks[:n_files]:
+        t0 = time.perf_counter()
+        n = 0
+        for _off, text in iter_records(path):
+            extract_property(text, PROP_ID)
+            n += 1
+        dt = time.perf_counter() - t0
+        samples.append(
+            ThroughputSample(path.name, path.stat().st_size, n, dt)
+        )
+    return samples
+
+
+def estimate_runtime(
+    n_targets: int,
+    n_files: int,
+    records_per_file: int,
+    throughput_rps: float,
+    membership: str = "list",
+) -> Tuple[float, float]:
+    """Eq. 2/3: (operation_count, projected_seconds).
+
+    ``membership="list"`` charges one pass over the target list per record
+    (the paper's 8.4e13-comparison model with effective comparison rate
+    folded into ``throughput_rps`` per the paper's normalization); "set"
+    charges a single corpus scan.
+    """
+    if membership == "list":
+        ops = float(n_targets) * n_files * records_per_file
+        # paper normalizes by per-molecule scan rate across the whole target
+        # list: T = N*M*S / (rate * list_factor); we keep their convention of
+        # quoting ops and dividing by measured effective rate.
+        seconds = ops / max(throughput_rps, 1e-9)
+    else:
+        ops = float(n_files) * records_per_file
+        seconds = ops / max(throughput_rps, 1e-9)
+    return ops, seconds

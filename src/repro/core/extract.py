@@ -1,0 +1,148 @@
+"""Algorithm 3 — index-based extraction with grouped, offset-sorted seeks.
+
+Phase 2 of the paper's architecture.  The three published optimizations are
+all here and individually switchable (so the benchmarks can ablate them,
+Table II / §IV.D):
+
+1. **GroupByFilename** — one ``open()`` per file containing targets
+   (477,123 potential opens → 312 in the paper).
+2. **Offset-sorted traversal** — targets within a file are visited in
+   ascending byte order, converting random seeks into near-sequential
+   forward reads (10–100× effective-throughput on spinning disks; still
+   measurable on SSD/page-cache via readahead).
+3. **Defensive verification** — every extracted record's identifier is
+   *recomputed from its structural data* and compared against the expected
+   identifier.  This is the step that exposed the paper's InChIKey
+   collisions (§VI.A): under ``hashed_key`` indexing, a collision fetches a
+   structurally different molecule whose recomputed full id mismatches.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .identifiers import canonical_id_from_structure, hashed_key
+from .index import ByteOffsetIndex
+from .records import RecordStore, extract_property, read_record_at
+from .sdfgen import PROP_ID
+
+__all__ = ["ExtractionResult", "Mismatch", "plan_extraction", "extract"]
+
+
+@dataclass(frozen=True)
+class Mismatch:
+    """A verification failure: what the index promised vs what the bytes say."""
+
+    expected_id: str
+    found_id: str
+    file: str
+    offset: int
+    lookup_key: str
+
+
+@dataclass
+class ExtractionResult:
+    records: Dict[str, str] = field(default_factory=dict)   # full_id -> record
+    missing: List[str] = field(default_factory=list)        # not in index
+    mismatches: List[Mismatch] = field(default_factory=list)
+    files_opened: int = 0
+    seeks: int = 0
+    bytes_read: int = 0
+    seconds: float = 0.0
+
+    @property
+    def found(self) -> int:
+        return len(self.records)
+
+
+def plan_extraction(
+    index: ByteOffsetIndex,
+    targets: Sequence[str],
+    key_bits: int = 64,
+    sort_offsets: bool = True,
+) -> Tuple[Dict[str, List[Tuple[str, str, int]]], List[str]]:
+    """Build the per-file extraction plan.
+
+    Returns ``(plan, missing)`` where ``plan[file] = [(full_id, lookup_key,
+    offset), ...]`` sorted by ascending offset (if ``sort_offsets``).
+
+    Targets are always full canonical ids (the ChEMBL∩eMolecules list is
+    known by full id); under ``hashed_key`` indexing the lookup key is the
+    digest of the target id — exactly the paper's pipeline before the §VI.C
+    migration.
+    """
+    plan: Dict[str, List[Tuple[str, str, int]]] = {}
+    missing: List[str] = []
+    hashed = index.key_mode == "hashed_key"
+    for full_id in targets:
+        key = hashed_key(full_id, key_bits) if hashed else full_id
+        loc = index.lookup(key)
+        if loc is None:
+            missing.append(full_id)
+            continue
+        fname, off = loc
+        plan.setdefault(fname, []).append((full_id, key, off))
+    if sort_offsets:
+        for fname in plan:
+            plan[fname].sort(key=lambda t: t[2])
+    return plan, missing
+
+
+def extract(
+    store: RecordStore,
+    index: ByteOffsetIndex,
+    targets: Sequence[str],
+    verify: bool = True,
+    sort_offsets: bool = True,
+    group_by_file: bool = True,
+    key_bits: int = 64,
+) -> ExtractionResult:
+    """Algorithm 3: seek-extract every target through the index.
+
+    With ``group_by_file=False`` the ungrouped access pattern (one open per
+    target) is used — kept for the ablation benchmark only.
+    """
+    t0 = time.perf_counter()
+    res = ExtractionResult()
+    plan, missing = plan_extraction(index, targets, key_bits, sort_offsets)
+    res.missing = missing
+
+    def handle_record(full_id: str, key: str, fname: str, off: int, text: str):
+        res.seeks += 1
+        res.bytes_read += len(text)
+        if verify:
+            try:
+                recomputed = canonical_id_from_structure(text)
+            except ValueError:
+                recomputed = "<unparseable>"
+            if recomputed != full_id:
+                # The paper's "log error" branch — and the collision signal.
+                res.mismatches.append(
+                    Mismatch(full_id, recomputed, fname, off, key)
+                )
+                return
+        res.records[full_id] = text
+
+    if group_by_file:
+        for fname, items in plan.items():
+            path = store.path_of(fname)
+            res.files_opened += 1
+            with open(path, "rb") as handle:
+                # offsets ascend (sort_offsets) => forward-only seeks, the
+                # paper's near-sequential access pattern.
+                for full_id, key, off in items:
+                    text = read_record_at(handle, off)
+                    handle_record(full_id, key, fname, off, text)
+    else:
+        for fname, items in plan.items():
+            path = store.path_of(fname)
+            for full_id, key, off in items:
+                res.files_opened += 1
+                text = read_record_at(path, off)
+                handle_record(full_id, key, fname, off, text)
+
+    res.seconds = time.perf_counter() - t0
+    return res

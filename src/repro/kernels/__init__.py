@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as ``kernel.py`` (pl.pallas_call + BlockSpec tiling),
+``ops.py`` (jit'd dispatching wrapper) and ``ref.py`` (pure-jnp oracle).
+On this CPU container kernels execute only under ``interpret=True`` (Mosaic
+lowering is TPU-only); the model code paths default to the reference
+implementations off-TPU.
+
+* ``hash_mix``        — 128-bit mixing digest of packed identifiers
+                        (the InChIKey role for on-device analytics).
+* ``sorted_probe``    — fence-partitioned membership probe against a sorted
+                        digest table (the paper's index lookup, TPU-native).
+* ``flash_attention`` — causal/sliding-window GQA flash attention.
+* ``ssd_scan``        — Mamba2 SSD inter-chunk state recurrence.
+"""
+
+from .hash_mix.ops import hash_mix, hash_mix_u64
+from .sorted_probe.ops import sorted_probe
+from .flash_attention.ops import flash_attention
+from .ssd_scan.ops import ssd_scan

@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for the ``hash_mix`` kernel.
+
+128-bit mixing hash (xxhash/murmur-flavoured avalanche) over packed
+``(N, W)`` uint32 identifier tensors, emitted as ``(N, 4)`` uint32 lanes.
+This is the digest the TPU data plane uses in place of the paper's
+SHA-256-derived InChIKey for *in-memory* analytics (dedup, membership,
+collision grouping) — cryptographic strength is not required there
+because every digest hit is verified against the full identifier
+(Algorithm 3 discipline); what matters is avalanche quality and speed.
+
+The reference is the unblocked formulation; the Pallas kernel must match
+it bit-exactly for every shape/dtype in the sweep.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["hash_mix_ref", "PRIME1", "PRIME2", "PRIME3", "PRIME4"]
+
+# xxhash32 primes (odd, high-entropy) — standard public constants.
+# numpy scalars (not jnp arrays) so Pallas kernels see them as literals.
+PRIME1 = np.uint32(0x9E3779B1)
+PRIME2 = np.uint32(0x85EBCA77)
+PRIME3 = np.uint32(0xC2B2AE3D)
+PRIME4 = np.uint32(0x27D4EB2F)
+
+
+def _rotl(x: jax.Array, r: int) -> jax.Array:
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def _avalanche(h: jax.Array) -> jax.Array:
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * PRIME2
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * PRIME3
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def hash_mix_ref(x: jax.Array, seed: int = 0) -> jax.Array:
+    """``(N, W) uint32 → (N, 4) uint32`` 128-bit mixing digest.
+
+    Four decorrelated accumulator lanes absorb every input lane with
+    distinct rotation/prime schedules, then avalanche + cross-mix.
+    """
+    if x.dtype != jnp.uint32:
+        raise TypeError(f"hash_mix expects uint32, got {x.dtype}")
+    if x.ndim != 2:
+        raise ValueError(f"hash_mix expects (N, W), got {x.shape}")
+    n, w = x.shape
+    s = jnp.uint32(seed)
+    h0 = jnp.full((n,), PRIME1 + s, dtype=jnp.uint32)
+    h1 = jnp.full((n,), PRIME2 ^ s, dtype=jnp.uint32)
+    h2 = jnp.full((n,), PRIME3 + (s * PRIME1), dtype=jnp.uint32)
+    h3 = jnp.full((n,), PRIME4 ^ (s * PRIME2), dtype=jnp.uint32)
+    for i in range(w):
+        k = x[:, i]
+        lane = jnp.uint32(i + 1)
+        h0 = _rotl(h0 + k * PRIME2, 13) * PRIME1
+        h1 = _rotl(h1 ^ (k + lane) * PRIME3, 17) * PRIME2
+        h2 = _rotl(h2 + (k ^ lane * PRIME1) * PRIME4, 11) * PRIME3
+        h3 = _rotl(h3 ^ k * PRIME1, 19) * PRIME4
+    # length injection + cross-lane mix + final avalanche
+    ln = jnp.uint32(w)
+    h0 = _avalanche(h0 ^ (ln * PRIME1) ^ _rotl(h1, 7))
+    h1 = _avalanche(h1 ^ (ln * PRIME2) ^ _rotl(h2, 12))
+    h2 = _avalanche(h2 ^ (ln * PRIME3) ^ _rotl(h3, 18))
+    h3 = _avalanche(h3 ^ (ln * PRIME4) ^ _rotl(h0, 23))
+    return jnp.stack([h0, h1, h2, h3], axis=1)

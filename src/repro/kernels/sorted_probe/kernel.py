@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for ``sorted_probe``: fence-partitioned membership.
+
+The TPU adaptation of the paper's index lookup (DESIGN.md §2): a CPU hash
+map is pointer-chasing and does not vectorize; a *sorted dense table* +
+*fence-partitioned broadcast compare* does:
+
+  stage A (jnp, ops.py) — sort queries, assign each to a table block via a
+    fence search (fence = every B_T-th table key), bucket queries per block;
+  stage B (this kernel)  — grid over table blocks: each step holds one
+    ``(B_T, 2)`` table block and its ``(QMAX, 2)`` query bucket in VMEM and
+    resolves membership with a dense ``(B_T × QMAX)`` lexicographic compare
+    (VPU-regular, branch-free — the TPU-idiomatic substitute for per-query
+    binary search, whose dynamic lane gathers are the expensive thing on
+    this hardware);
+  stage C (jnp, ops.py) — scatter results back to original query order.
+
+VMEM per grid step (B_T=2048, QMAX=512):
+  table 2048×2×4 B = 16 KiB, queries 512×2×4 B = 4 KiB,
+  compare matrices 2×2048×512 bool ≈ 2 MiB  « 16 MiB VMEM ✓
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["probe_blocks_pallas", "DEFAULT_TABLE_BLOCK", "SENTINEL"]
+
+DEFAULT_TABLE_BLOCK = 2048
+SENTINEL = 0xFFFFFFFF  # bucket padding key (never a valid query by masking)
+
+
+def _probe_kernel(t_ref, q_ref, found_ref, pos_ref, *, table_block: int):
+    t = t_ref[...]   # (B_T, 2) uint32, sorted ascending
+    q = q_ref[0]     # (QMAX, 2) uint32 bucket (sentinel-padded)
+    t_hi, t_lo = t[:, 0], t[:, 1]
+    q_hi, q_lo = q[:, 0], q[:, 1]
+    # dense lexicographic compare: (B_T, QMAX)
+    lt = (t_hi[:, None] < q_hi[None, :]) | (
+        (t_hi[:, None] == q_hi[None, :]) & (t_lo[:, None] < q_lo[None, :])
+    )
+    eq = (t_hi[:, None] == q_hi[None, :]) & (t_lo[:, None] == q_lo[None, :])
+    count = jnp.sum(lt.astype(jnp.int32), axis=0)  # lower bound within block
+    found = jnp.any(eq, axis=0)
+    base = pl.program_id(0) * table_block
+    found_ref[0, :] = found.astype(jnp.int32)
+    pos_ref[0, :] = base + count
+
+
+def probe_blocks_pallas(
+    table_padded: jax.Array,   # (nblocks * B_T, 2) uint32, sorted + sentinel pad
+    buckets: jax.Array,        # (nblocks, QMAX, 2) uint32 bucketed queries
+    table_block: int = DEFAULT_TABLE_BLOCK,
+    interpret: bool = False,
+):
+    """Stage B: per-block membership. Returns (found, pos) of shape
+    ``(nblocks, QMAX)``; ``pos`` is the global lower-bound index assuming the
+    query was routed to the correct block (stage A's fence invariant)."""
+    nblocks, qmax, _ = buckets.shape
+    if table_padded.shape[0] != nblocks * table_block:
+        raise ValueError(
+            f"table rows {table_padded.shape[0]} != nblocks*B_T "
+            f"{nblocks}*{table_block}"
+        )
+    kernel = functools.partial(_probe_kernel, table_block=table_block)
+    found, pos = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((table_block, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, qmax, 2), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qmax), lambda i: (i, 0)),
+            pl.BlockSpec((1, qmax), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, qmax), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, qmax), jnp.int32),
+        ],
+        interpret=interpret,
+    )(table_padded, buckets)
+    return found, pos

@@ -1,0 +1,85 @@
+"""Pure-jnp oracle for ``sorted_probe``: membership of 64-bit keys in a
+sorted table.
+
+Keys are ``(hi, lo)`` uint32 pairs (TPU-friendly — no uint64 lanes).  The
+reference is a branch-free vectorized binary search over the full table:
+``log2(M)`` rounds of midpoint gathers.  Returns, per query:
+
+* ``found`` — whether the key is present,
+* ``pos``   — the lower-bound insertion index (== match index when found).
+
+This is the paper's Phase-2 "consult the in-memory index" operation
+(Algorithm 3 line 5) recast for TPU: a sorted dense array + binary search
+replaces the CPU hash map (§IV.A's O(1) dict), trading O(1) expected for
+O(log M) worst-case but gaining fully dense, pointer-free memory traffic.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sorted_probe_ref", "pair_less", "pair_eq", "sort_pairs"]
+
+
+def pair_less(a_hi, a_lo, b_hi, b_lo):
+    """(a_hi,a_lo) < (b_hi,b_lo) lexicographically, branch-free."""
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def pair_eq(a_hi, a_lo, b_hi, b_lo):
+    return (a_hi == b_hi) & (a_lo == b_lo)
+
+
+def sort_pairs(keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sort ``(N, 2)`` uint32 pairs lexicographically; returns (sorted, order).
+
+    Two stable argsort passes (LSD radix over the two lanes).
+    """
+    lo = keys[:, 1]
+    hi = keys[:, 0]
+    o1 = jnp.argsort(lo, stable=True)
+    o2 = jnp.argsort(hi[o1], stable=True)
+    order = o1[o2]
+    return keys[order], order
+
+
+def sorted_probe_ref(
+    queries: jax.Array, table: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """``queries (Q,2) uint32`` against ``table (M,2) uint32`` (sorted asc).
+
+    Returns ``(found (Q,) bool, pos (Q,) int32)`` with ``pos`` the lower
+    bound (first index with table[idx] >= query).
+    """
+    if queries.ndim != 2 or queries.shape[1] != 2:
+        raise ValueError(f"queries must be (Q, 2), got {queries.shape}")
+    if table.ndim != 2 or table.shape[1] != 2:
+        raise ValueError(f"table must be (M, 2), got {table.shape}")
+    q = queries.shape[0]
+    m = table.shape[0]
+    if m == 0:
+        return jnp.zeros((q,), bool), jnp.zeros((q,), jnp.int32)
+    q_hi, q_lo = queries[:, 0], queries[:, 1]
+    t_hi, t_lo = table[:, 0], table[:, 1]
+
+    lo_b = jnp.zeros((q,), jnp.int32)
+    hi_b = jnp.full((q,), m, jnp.int32)
+    # fixed-step branch-free search; `active` makes the converged state a
+    # fixed point (extra steps must not walk past the answer)
+    steps = max(1, m.bit_length())
+    for _ in range(steps):
+        active = lo_b < hi_b
+        mid = (lo_b + hi_b) // 2
+        mh = jnp.take(t_hi, mid, mode="clip")
+        ml = jnp.take(t_lo, mid, mode="clip")
+        go_right = pair_less(mh, ml, q_hi, q_lo)  # table[mid] < query
+        lo_b = jnp.where(active & go_right, mid + 1, lo_b)
+        hi_b = jnp.where(active & ~go_right, mid, hi_b)
+    pos = lo_b
+    ph = jnp.take(t_hi, jnp.minimum(pos, m - 1))
+    pl_ = jnp.take(t_lo, jnp.minimum(pos, m - 1))
+    found = (pos < m) & pair_eq(ph, pl_, q_hi, q_lo)
+    return found, pos.astype(jnp.int32)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for ``ssd_scan``: Mamba2 inter-chunk state recurrence.
+
+The SSD (state-space duality) chunked form splits the sequence into chunks;
+intra-chunk terms are dense matmuls (MXU-friendly, left in XLA), while the
+inter-chunk term is the sequential recurrence this kernel owns:
+
+    h[0]     = 0
+    h[c + 1] = decay[c] * h[c] + states[c]
+
+with per-(batch·head) state matrices ``states (BH, C, P, N)`` and scalar
+chunk decays ``decay (BH, C)``.  Output is the *prefix* state entering each
+chunk: ``prefix[c] = h[c]``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(states: jax.Array, decay: jax.Array) -> jax.Array:
+    """``states (BH, C, P, N) f32, decay (BH, C) f32 → prefix (BH, C, P, N)``."""
+    if states.ndim != 4 or decay.ndim != 2:
+        raise ValueError(f"bad shapes {states.shape} {decay.shape}")
+    bh, c, p, n = states.shape
+
+    def step(h, xs):
+        s_c, d_c = xs
+        out = h
+        h = d_c[:, None, None] * h + s_c
+        return h, out
+
+    h0 = jnp.zeros((bh, p, n), states.dtype)
+    # scan over the chunk axis
+    _, prefix = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decay, 1, 0)),
+    )
+    return jnp.moveaxis(prefix, 0, 1)

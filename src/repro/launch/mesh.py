@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init;
+smoke tests and benches must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "dp_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (elastic re-carve after node loss, smoke meshes…)."""
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} / axes {axes} mismatch")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a mesh (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONL records."""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+
+def _temp_gb(rec) -> float:
+    m = re.search(r"temp_size_in_bytes=(\d+)", rec.get("memory_analysis", ""))
+    return int(m.group(1)) / 1e9 if m else float("nan")
+
+
+def _args_gb(rec) -> float:
+    m = re.search(r"argument_size_in_bytes=(\d+)", rec.get("memory_analysis", ""))
+    return int(m.group(1)) / 1e9 if m else float("nan")
+
+
+def roofline_table(path: Path, mesh: str = "16x16") -> str:
+    rows = [json.loads(l) for l in open(path)]
+    out = [
+        "| arch × shape | bottleneck | t_comp (s) | t_mem (s) | t_coll (s) "
+        "| MFU-bound | useful FLOPs | HBM args+temp (GB) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} × {r['shape']} | — skipped (long_500k needs "
+                f"sub-quadratic attention) | | | | | | |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} × {r['shape']} | ERROR | | | | | | |")
+            continue
+        rf = r["roofline"]
+        lb = rf["step_time_lb_s"]
+        mfu = r["model_flops_per_device"] / (lb * 197e12) if lb else 0
+        out.append(
+            f"| {r['arch']} × {r['shape']} | {rf['bottleneck']} "
+            f"| {rf['t_compute_s']:.3f} | {rf['t_memory_s']:.3f} "
+            f"| {rf['t_collective_s']:.3f} | {mfu:.1%} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {_args_gb(r):.1f}+{_temp_gb(r):.1f} |"
+        )
+    return "\n".join(out)
+
+
+def compare_table(base_path: Path, opt_path: Path, mesh: str = "16x16") -> str:
+    def load(p):
+        return {
+            (r["arch"], r["shape"]): r
+            for r in map(json.loads, open(p))
+            if r.get("mesh") == mesh and r["status"] == "ok"
+        }
+
+    base, opt = load(base_path), load(opt_path)
+    out = [
+        "| cell | t_mem base→opt | t_coll base→opt | temp GB base→opt "
+        "| MFU-bound base→opt |",
+        "|---|---|---|---|---|",
+    ]
+    for key in base:
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        rb, ro = b["roofline"], o["roofline"]
+        mfu_b = b["model_flops_per_device"] / (rb["step_time_lb_s"] * 197e12)
+        mfu_o = o["model_flops_per_device"] / (ro["step_time_lb_s"] * 197e12)
+        out.append(
+            f"| {key[0]} × {key[1]} "
+            f"| {rb['t_memory_s']:.2f}→{ro['t_memory_s']:.2f} "
+            f"| {rb['t_collective_s']:.2f}→{ro['t_collective_s']:.2f} "
+            f"| {_temp_gb(b):.1f}→{_temp_gb(o):.1f} "
+            f"| {mfu_b:.1%}→{mfu_o:.1%} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    cmd = sys.argv[1]
+    if cmd == "roofline":
+        print(roofline_table(Path(sys.argv[2]), sys.argv[3] if len(sys.argv) > 3 else "16x16"))
+    elif cmd == "compare":
+        print(compare_table(Path(sys.argv[2]), Path(sys.argv[3]),
+                            sys.argv[4] if len(sys.argv) > 4 else "16x16"))

@@ -1,0 +1,171 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_device      / peak_FLOP/s    (197 TF bf16/chip)
+  memory     = HLO_bytes_per_device      / HBM_bw         (819 GB/s/chip)
+  collective = collective_bytes_per_dev  / link_bw        (~50 GB/s/link)
+
+``compiled.cost_analysis()`` reports the post-SPMD per-device program, so
+all terms are per-chip; dividing per-chip quantities by per-chip rates is
+algebraically identical to the global form  X_global / (chips × rate).
+Collective bytes are not in cost_analysis — we parse the optimized HLO and
+sum operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (including async -start forms, counted
+once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+__all__ = [
+    "HW",
+    "RooflineTerms",
+    "collective_bytes_from_hlo",
+    "roofline_from_compiled",
+    "model_flops",
+]
+
+
+class HW:
+    PEAK_FLOPS = 197e12          # bf16 per chip
+    HBM_BW = 819e9               # bytes/s per chip
+    ICI_BW = 50e9                # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes summed over the module."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        kind = None
+        for k in _COLLECTIVES:
+            # match op name at call position; count async starts once
+            if re.search(rf"\b{k}(-start)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if re.search(rf"\b{kind}-done\(", rhs):
+            continue
+        # operand shapes = every typed shape after the opening paren
+        call = rhs.split("(", 1)[1]
+        for m in _SHAPE_RE.finditer(call):
+            out[kind] += _shape_bytes(m.group(1), m.group(2))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, int]
+    peak_memory_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / HW.PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HW.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / HW.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Roofline lower bound on step time (terms fully overlapped)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_lb_s": self.step_time_lb,
+        }
+
+
+def roofline_from_compiled(compiled) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        peak = 0.0
+    return RooflineTerms(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes=float(sum(coll.values())),
+        collective_breakdown=coll,
+        peak_memory_bytes=peak,
+    )
+
+
+def model_flops(n_params_active: int, n_tokens: int, kind: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference forward)."""
+    per_tok = 6 if kind == "train" else 2
+    return float(per_tok) * n_params_active * n_tokens

@@ -1,0 +1,90 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> …``.
+
+Wires the full stack for a real run: corpus/index data plane → model from
+the assigned-architecture registry → sharded train step on the requested
+mesh → catalog checkpoints + heartbeats.  On the CPU container the mesh is
+(1,1) and the reduced smoke config is the default; on a pod, pass
+``--full-config --mesh 16x16`` (the dry-run proves those lower).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core import RecordStore, build_index
+from repro.core.sdfgen import CorpusSpec, generate_corpus
+from repro.data.pipeline import IndexedDataset
+from repro.launch.mesh import make_mesh
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="yi-6b")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full published config (pod hardware)")
+    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 16x16")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--workdir", default="runs/train")
+    ap.add_argument("--corpus-records", type=int, default=4000)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.smoke()
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((d, m), ("data", "model")) if d * m > 1 else None
+
+    root = Path(args.workdir) / "corpus"
+    spec = CorpusSpec(n_files=4, records_per_file=args.corpus_records // 4)
+    generate_corpus(root, spec)
+    store = RecordStore(root)
+    ds = IndexedDataset(store, build_index(store, workers=2), args.seq_len)
+
+    tcfg = TrainerConfig(
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        grad_accum=args.grad_accum,
+        compress_grads=args.compress_grads,
+        opt=AdamWConfig(warmup_steps=max(2, args.steps // 10),
+                        total_steps=args.steps),
+    )
+    tr = Trainer(cfg, tcfg, ds, Path(args.workdir), mesh=mesh)
+
+    def log(step, rec):
+        if step % 5 == 0:
+            print(f"step {step:5d} loss {rec['loss']:.4f} "
+                  f"gnorm {rec['grad_norm']:.2f} {rec['dt']*1e3:.0f} ms",
+                  flush=True)
+
+    ctx = mesh or _nullcontext()
+    with ctx:
+        final, _, hist = tr.run(on_step=log)
+    print(f"done: {final} steps, loss {hist[0]['loss']:.4f} → "
+          f"{hist[-1]['loss']:.4f}, checkpoints at "
+          f"{tr.ckpt.root} (latest {tr.ckpt.latest_step()})")
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,456 @@
+"""Shared model substrate: norms, RoPE, GQA attention, SwiGLU MLP,
+embeddings and chunked cross-entropy.
+
+Conventions
+-----------
+* Functional params: nested dicts of jnp arrays.  Every ``init_*`` returns
+  ``(params, specs)`` where ``specs`` is a parallel pytree of logical axis
+  name tuples (see :mod:`repro.dist.logical`) — the launcher turns specs
+  into NamedShardings for pjit.
+* Master params are fp32; ``apply`` casts to the compute dtype (bf16).
+* Activations are annotated with ``constrain`` at layer boundaries; the
+  rule table decides what that means on the current mesh.
+* Attention supports three modes: full sequence (train/prefill), one-token
+  decode against a contiguous KV cache, and one-token decode against a
+  ring-buffer windowed cache (sliding-window layers at long context).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.logical import constrain
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = [
+    "Dtypes",
+    "dense_init",
+    "rmsnorm_init",
+    "rmsnorm",
+    "rope_freqs",
+    "apply_rope",
+    "attention_init",
+    "attention_apply",
+    "attention_decode",
+    "mlp_init",
+    "mlp_apply",
+    "embed_init",
+    "embed_apply",
+    "unembed_logits",
+    "chunked_xent",
+    "param_count",
+]
+
+PyTree = Any
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, spec, scale: Optional[float] = None):
+    """He-style init; returns (param, spec)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    p = scale * jax.random.normal(key, shape, dtype=jnp.float32)
+    return p, spec
+
+
+def rmsnorm_init(d: int):
+    return jnp.ones((d,), jnp.float32), ("embed_act",)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, Dh), positions broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["wq"], specs["wq"] = dense_init(ks[0], (d, h * dh), ("embed", "heads"))
+    params["wk"], specs["wk"] = dense_init(ks[1], (d, hkv * dh), ("embed", "heads"))
+    params["wv"], specs["wv"] = dense_init(ks[2], (d, hkv * dh), ("embed", "heads"))
+    params["wo"], specs["wo"] = dense_init(ks[3], (h * dh, d), ("heads", "embed"))
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        params["bk"] = jnp.zeros((hkv * dh,), jnp.float32)
+        params["bv"] = jnp.zeros((hkv * dh,), jnp.float32)
+        specs["bq"] = ("heads",)
+        specs["bk"] = ("heads",)
+        specs["bv"] = ("heads",)
+    return params, specs
+
+
+def _qkv(params, cfg: ModelConfig, x: jax.Array):
+    """x (B, S, D) -> q (B,S,H,Dh), k/v (B,S,Hkv,Dh) in compute dtype."""
+    cdt = compute_dtype(cfg)
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"].astype(cdt)
+    k = x @ params["wk"].astype(cdt)
+    v = x @ params["wv"].astype(cdt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cdt)
+        k = k + params["bk"].astype(cdt)
+        v = v + params["bv"].astype(cdt)
+    return (
+        q.reshape(b, s, h, dh),
+        k.reshape(b, s, hkv, dh),
+        v.reshape(b, s, hkv, dh),
+    )
+
+
+def attention_apply(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,                      # (B, S, D)
+    positions: jax.Array,              # (S,) or (B, S)
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    kv_from: Optional[jax.Array] = None,  # cross-attention source (B, F, D)
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / cross)."""
+    cdt = compute_dtype(cfg)
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    if kv_from is None:
+        q, k, v = _qkv(params, cfg, x)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        # cross attention: q from x, k/v from encoder output (no RoPE)
+        f = kv_from.shape[1]
+        q = (x @ params["wq"].astype(cdt)).reshape(b, s, h, dh)
+        k = (kv_from @ params["wk"].astype(cdt)).reshape(b, f, hkv, dh)
+        v = (kv_from @ params["wv"].astype(cdt)).reshape(b, f, hkv, dh)
+        causal = False
+        window = None
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "heads", None)
+    v = constrain(v, "batch", "seq", "heads", None)
+    out = flash_attention(
+        jnp.swapaxes(q, 1, 2),
+        jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2),
+        causal=causal,
+        window=window,
+    )                                              # (B, H, S, Dh)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, h * dh)
+    out = out @ params["wo"].astype(cdt)
+    from repro import flags as _flags
+    from jax.ad_checkpoint import checkpoint_name
+
+    out = constrain(out, *_flags.residual_axes())
+    return checkpoint_name(out, "attn_out")
+
+
+def _gqa_decode_scores(q, k_cache, valid, cdt):
+    """q (B,H,Dh), k_cache (B,Hkv,S,Dh), valid (B,S) -> ctx weights (B,H,S).
+
+    §Perf note: the matmul runs in the cache dtype with f32 accumulation
+    (preferred_element_type) — casting the whole cache to f32 doubled the
+    decode cells' HBM traffic in the baseline dry-run.
+    """
+    b, h, dh = q.shape
+    hkv = k_cache.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh).astype(k_cache.dtype)
+    s = jnp.einsum(
+        "bkgd,bksd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    s = s / math.sqrt(dh)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return p  # (B, Hkv, G, S)
+
+
+def decode_attention_chunked(
+    q,          # (B, H, Dh)
+    k_cache,    # (B, Hkv, S, Dh)
+    v_cache,    # (B, Hkv, S, Dh)
+    valid,      # (B, S) bool
+    chunk: int = 2048,
+):
+    """One-token GQA attention over a cache, online-softmax over chunks.
+
+    §Perf iteration 2 for the decode cells: the unchunked path materializes
+    (B, H, S) f32 score/softmax tensors ~20× larger than the cache slice it
+    reads; scanning KV chunks with an (m, l, acc) carry caps the live
+    intermediate at (B, H, chunk) — the decode analogue of flash attention,
+    in pure XLA.  Chunk loop honours flags.scan_unroll() (roofline probes).
+    """
+    from repro import flags as _flags
+
+    b, h, dh = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    c = min(chunk, s)
+    pad = (c - s % c) % c
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    nch = (s + pad) // c
+    qg = (q / math.sqrt(dh)).reshape(b, hkv, g, dh).astype(k_cache.dtype)
+    kc = k_cache.reshape(b, hkv, nch, c, dh).transpose(2, 0, 1, 3, 4)
+    vc = v_cache.reshape(b, hkv, nch, c, dh).transpose(2, 0, 1, 3, 4)
+    valc = valid.reshape(b, nch, c).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, vm = xs
+        sc = jnp.einsum(
+            "bkgd,bkcd->bkgc", qg, kb, preferred_element_type=jnp.float32
+        )
+        sc = jnp.where(vm[:, None, None, :], sc, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None]) * vm[:, None, None, :]
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgc,bkcd->bkgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, dh), jnp.float32)
+    (_, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, valc), unroll=_flags.scan_unroll()
+    )
+    l_safe = jnp.where(l_f > 0, l_f, 1.0)
+    return (acc / l_safe[..., None]).reshape(b, h, dh)  # f32
+
+
+def attention_decode(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,                 # (B, 1, D)
+    pos: jax.Array,               # (B,) absolute position of the new token
+    cache: Dict[str, jax.Array],  # {"k","v"}: (B, Hkv, S_slots, Dh)
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    update_cache: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode.  Contiguous cache when ``window is None`` (slot =
+    absolute position); ring-buffer cache otherwise (slot = pos % window)."""
+    cdt = compute_dtype(cfg)
+    b, _, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(params, cfg, x)            # (B,1,H,Dh)/(B,1,Hkv,Dh)
+    if use_rope:
+        p1 = pos[:, None]
+        q = apply_rope(q, p1, cfg.rope_theta)
+        k = apply_rope(k, p1, cfg.rope_theta)
+    q = q[:, 0]                                # (B, H, Dh)
+    k_new = jnp.swapaxes(k, 1, 2)              # (B, Hkv, 1, Dh)
+    v_new = jnp.swapaxes(v, 1, 2)
+
+    slots = cache["k"].shape[2]
+    slot = pos % window if window is not None else pos
+
+    if update_cache:
+        def upd(c, n, s_):
+            return lax.dynamic_update_slice(c, n.astype(c.dtype), (0, s_, 0))
+
+        k_cache = jax.vmap(upd)(cache["k"], k_new, slot)
+        v_cache = jax.vmap(upd)(cache["v"], v_new, slot)
+    else:
+        k_cache, v_cache = cache["k"], cache["v"]
+
+    idx = jnp.arange(slots)[None, :]           # (1, S_slots)
+    if window is None:
+        valid = idx <= pos[:, None]
+    else:
+        # ring buffer: slot s holds token t = pos - ((pos - s) mod W)
+        t = pos[:, None] - (pos[:, None] - idx) % window
+        valid = t >= 0
+    from repro import flags as _flags
+
+    # §Perf note (EXPERIMENTS.md, decode iteration 2 — REFUTED): chunking
+    # the decode cache breaks its (batch, seq→model) sharding: the
+    # reshape/transpose reshards ~5 GB of cache per layer (collective term
+    # 0→3.4 s).  The unchunked einsum+softmax is already GSPMD's
+    # flash-decoding pattern (per-shard partial softmax + scalar combines),
+    # so it stays the default; REPRO_DECODE_CHUNKED=1 exists for
+    # single-device serving experiments.
+    if _flags.DECODE_CHUNKED:
+        ctx = decode_attention_chunked(q, k_cache, v_cache, valid)
+    else:
+        p = _gqa_decode_scores(q, k_cache, valid, cdt)  # (B,Hkv,G,S) f32
+        ctx = jnp.einsum(
+            "bkgs,bksd->bkgd", p.astype(v_cache.dtype), v_cache,
+            preferred_element_type=jnp.float32,
+        )
+    ctx = ctx.reshape(b, h * dh).astype(cdt)
+    out = (ctx @ params["wo"].astype(cdt))[:, None, :]  # (B,1,D)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    params = {}
+    specs = {}
+    params["wg"], specs["wg"] = dense_init(ks[0], (d, f), ("embed", "d_ff"))
+    params["wu"], specs["wu"] = dense_init(ks[1], (d, f), ("embed", "d_ff"))
+    params["wd"], specs["wd"] = dense_init(ks[2], (f, d), ("d_ff", "embed"))
+    return params, specs
+
+
+def mlp_apply(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    cdt = compute_dtype(cfg)
+    g = jax.nn.silu(x @ params["wg"].astype(cdt))
+    u = x @ params["wu"].astype(cdt)
+    h = constrain(g * u, "batch", "seq", "d_ff")
+    out = h @ params["wd"].astype(cdt)
+    from repro import flags as _flags
+    from jax.ad_checkpoint import checkpoint_name
+
+    out = constrain(out, *_flags.residual_axes())
+    return checkpoint_name(out, "ffn_out")
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    v, d = cfg.vocab_size, cfg.d_model
+    ks = jax.random.split(key, 2)
+    params = {"table": 0.02 * jax.random.normal(ks[0], (v, d), jnp.float32)}
+    specs = {"table": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        params["unembed"], specs["unembed"] = dense_init(
+            ks[1], (d, v), ("embed", "vocab"), scale=0.02
+        )
+    return params, specs
+
+
+def embed_apply(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    cdt = compute_dtype(cfg)
+    # Relayout the table for the lookup: vocab-replicated, d_model sharded
+    # over the FSDP axes.  Gathering straight from the (vocab→model,
+    # d→fsdp) training layout makes SPMD "involuntarily fully rematerialize"
+    # the gathered activations (XLA b/433785288); one explicit all-gather of
+    # the (small) table shard is strictly cheaper.  §Perf iteration.
+    table = constrain(params["table"].astype(cdt), None, "embed")
+    x = table[tokens]
+    return constrain(x, "batch", "seq", None)
+
+
+def unembed_logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    cdt = compute_dtype(cfg)
+    w = (
+        params["table"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(cdt)
+    logits = x @ w
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def chunked_xent(
+    params,
+    cfg: ModelConfig,
+    hidden: jax.Array,     # (B, S, D) final hidden states
+    targets: jax.Array,    # (B, S) next-token ids
+    mask: Optional[jax.Array] = None,   # (B, S) 1 = contributes to loss
+    chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits at once.
+
+    lax.map over sequence chunks: each step computes a (B, chunk, V) logits
+    slab (vocab-sharded over "model"), its logsumexp, and the target logit.
+    Peak logits memory drops S/chunk-fold — required at 262k vocab.
+    """
+    b, s, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    c = min(chunk, s)
+    n_chunks = (s + c - 1) // c
+    pad = n_chunks * c - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hs = hidden.reshape(b, n_chunks, c, d).swapaxes(0, 1)   # (n, B, c, D)
+    ts = targets.reshape(b, n_chunks, c).swapaxes(0, 1)
+    ms = mask.reshape(b, n_chunks, c).swapaxes(0, 1)
+
+    def one(args):
+        hx, tx, mx = args
+        logits = unembed_logits(params, cfg, hx).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)             # (B, c)
+        tgt = jnp.take_along_axis(logits, tx[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * mx
+        return jnp.sum(nll)
+
+    from repro import flags
+
+    if flags.unrolling():
+        # dry-run roofline probes: XLA cost_analysis counts loop bodies
+        # once, so unroll the chunk loop at trace time
+        total = jnp.zeros((), jnp.float32)
+        for i in range(n_chunks):
+            total = total + one((hs[i], ts[i], ms[i]))
+        losses = total
+    else:
+        losses = jnp.sum(lax.map(one, (hs, ts, ms)))
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return losses / denom
+
+
+def param_count(params: PyTree) -> int:
+    return int(
+        sum(x.size for x in jax.tree_util.tree_leaves(params))
+    )

@@ -1,0 +1,157 @@
+"""Uniform model API over all assigned architecture families.
+
+``build_model(cfg)`` returns a :class:`ModelApi` with the same five entry
+points regardless of family — the trainer, serving engine, dry-run and
+benchmarks program against this interface only:
+
+  init(key)                       → (params, param_specs)
+  loss(params, batch)             → (scalar, metrics)       [train_step core]
+  prefill(params, batch, max_len) → (last_logits, cache)
+  decode_step(params, token, pos, cache) → (logits, cache)  [serve_step core]
+  cache_init(batch, max_len)      → (cache, cache_specs)
+  input_specs(shape)              → dict of ShapeDtypeStructs (dry-run)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from . import encdec, hybrid, ssm, transformer
+
+__all__ = ["ModelApi", "build_model"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_init: Callable
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+        No device allocation — the same pattern the dry-run uses for full
+        production configs (weak-type-correct, shardable).
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        f32 = jnp.float32
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            specs: Dict[str, jax.ShapeDtypeStruct] = {}
+            s_txt = s - (cfg.n_img_tokens or 0)
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s_txt), i32)
+            if shape.kind == "train":
+                specs["loss_mask"] = jax.ShapeDtypeStruct((b, s_txt), f32)
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.enc_frames, cfg.d_model), f32
+                )
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_img_tokens, cfg.d_model), f32
+                )
+            return specs
+        # decode: one new token against a cache of seq_len
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+        }
+
+
+def _transformer_api(cfg: ModelConfig) -> ModelApi:
+    def loss(params, batch):
+        return transformer.lm_loss(
+            params,
+            cfg,
+            batch["tokens"],
+            loss_mask=batch.get("loss_mask"),
+            extra_embeds=batch.get("patch_embeds"),
+        )
+
+    def prefill(params, batch, max_len=None):
+        return transformer.lm_prefill(
+            params,
+            cfg,
+            batch["tokens"],
+            extra_embeds=batch.get("patch_embeds"),
+            max_len=max_len,
+        )
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(cfg, key),
+        loss=loss,
+        prefill=prefill,
+        decode_step=lambda p, t, pos, c: transformer.lm_decode_step(p, cfg, t, pos, c),
+        cache_init=lambda b, m: transformer.lm_cache_init(cfg, b, m),
+    )
+
+
+def _hybrid_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: hybrid.init_hybrid(cfg, key),
+        loss=lambda p, batch: hybrid.hybrid_loss(
+            p, cfg, batch["tokens"], loss_mask=batch.get("loss_mask")
+        ),
+        prefill=lambda p, batch, max_len=None: hybrid.hybrid_prefill(
+            p, cfg, batch["tokens"], max_len=max_len
+        ),
+        decode_step=lambda p, t, pos, c: hybrid.hybrid_decode_step(p, cfg, t, pos, c),
+        cache_init=lambda b, m: hybrid.hybrid_cache_init(cfg, b, m),
+    )
+
+
+def _ssm_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: ssm.init_ssm(cfg, key),
+        loss=lambda p, batch: ssm.ssm_loss(
+            p, cfg, batch["tokens"], loss_mask=batch.get("loss_mask")
+        ),
+        prefill=lambda p, batch, max_len=None: ssm.ssm_prefill(
+            p, cfg, batch["tokens"], max_len=max_len
+        ),
+        decode_step=lambda p, t, pos, c: ssm.ssm_decode_step(p, cfg, t, pos, c),
+        cache_init=lambda b, m: ssm.ssm_cache_init(cfg, b, m),
+    )
+
+
+def _encdec_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: encdec.init_encdec(cfg, key),
+        loss=lambda p, batch: encdec.encdec_loss(
+            p, cfg, batch["frames"], batch["tokens"],
+            loss_mask=batch.get("loss_mask"),
+        ),
+        prefill=lambda p, batch, max_len=None: encdec.encdec_prefill(
+            p, cfg, batch["frames"], batch["tokens"], max_len=max_len
+        ),
+        decode_step=lambda p, t, pos, c: encdec.encdec_decode_step(p, cfg, t, pos, c),
+        cache_init=lambda b, m: encdec.encdec_cache_init(cfg, b, m),
+    )
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _transformer_api(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_api(cfg)
+    if cfg.family == "ssm":
+        return _ssm_api(cfg)
+    if cfg.family == "encdec":
+        return _encdec_api(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,357 @@
+"""Decoder-only LM: dense / local-global (gemma3) / MoE / VLM families.
+
+Layer stacks are ``lax.scan`` over stacked weights (compile-time constant
+HLO regardless of depth — essential for the 66-cell dry-run).  Uniform
+archs scan over single layers; gemma3 scans over blocks of
+``local_block`` layers (5 sliding-window + 1 global).  Remat wraps the
+scanned body (nothing saved inside a layer); the carried residual stream
+is sequence-sharded over "model" (logical axis ``seq_sp``) so the saved
+activations per chip stay small (DESIGN.md §3).
+
+Entry points: ``init_lm``, ``lm_loss`` (train), ``lm_prefill`` (forward +
+KV cache build), ``lm_decode_step`` (one-token serve), ``lm_cache_init``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import flags
+from repro.configs.base import ModelConfig
+from repro.dist.logical import constrain
+from repro.models import moe as moe_mod
+from repro.models.common import (
+    attention_apply,
+    attention_decode,
+    attention_init,
+    chunked_xent,
+    compute_dtype,
+    embed_apply,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed_logits,
+    _qkv,
+    apply_rope,
+)
+
+__all__ = [
+    "init_lm",
+    "lm_forward",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+    "lm_cache_init",
+    "layer_windows",
+]
+
+PyTree = Any
+
+
+def _n_scan(cfg: ModelConfig) -> Tuple[int, int]:
+    """(number of scan steps, layers per step)."""
+    if cfg.local_block:
+        assert cfg.n_layers % cfg.local_block == 0
+        return cfg.n_layers // cfg.local_block, cfg.local_block
+    return cfg.n_layers, 1
+
+
+def layer_windows(cfg: ModelConfig):
+    """Window (or None) per sub-layer position within one scan step."""
+    _, per = _n_scan(cfg)
+    if cfg.local_block:
+        # gemma3: positions 0..per-2 local (sliding window), last one global
+        return [cfg.window] * (per - 1) + [None]
+    return [cfg.window] * per
+
+
+def _is_moe_layer(cfg: ModelConfig) -> bool:
+    return cfg.n_experts > 0 and cfg.family in ("moe",)
+
+
+def _sublayer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["ln1"], s["ln1"] = rmsnorm_init(cfg.d_model)
+    p["attn"], s["attn"] = attention_init(ks[0], cfg)
+    p["ln2"], s["ln2"] = rmsnorm_init(cfg.d_model)
+    if _is_moe_layer(cfg):
+        p["moe"], s["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"], s["mlp"] = mlp_init(ks[1], cfg)
+    return p, s
+
+
+def _stack_inits(init_fn, key, n: int):
+    """vmap an init over n keys; returns stacked params + per-layer specs."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, specs = init_fn(key)  # structure only
+    specs = jax.tree_util.tree_map(
+        lambda sp: ("layers",) + tuple(sp),
+        specs,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return params, specs
+
+
+def init_lm(cfg: ModelConfig, key) -> Tuple[PyTree, PyTree]:
+    n_steps, per = _n_scan(cfg)
+    ks = jax.random.split(key, 3)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["embed"], specs["embed"] = embed_init(ks[0], cfg)
+
+    if per == 1:
+        blk_p, blk_s = _stack_inits(lambda k: _sublayer_init(k, cfg), ks[1], n_steps)
+    else:
+        def block_init(k):
+            kk = jax.random.split(k, per)
+            ps, ss = zip(*[_sublayer_init(kk[i], cfg) for i in range(per)])
+            stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ps)
+            return stacked, jax.tree_util.tree_map(
+                lambda sp: ("block_pos",) + tuple(sp),
+                ss[0],
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+        blk_p, blk_s = _stack_inits(block_init, ks[1], n_steps)
+    params["blocks"] = blk_p
+    specs["blocks"] = blk_s
+    params["final_norm"], specs["final_norm"] = rmsnorm_init(cfg.d_model)
+    return params, specs
+
+
+def _apply_sublayer(p, cfg: ModelConfig, x, positions, window):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + attention_apply(p["attn"], cfg, h, positions, causal=True, window=window)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+    else:
+        y, aux = mlp_apply(p["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def lm_forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                      # (B, S_txt)
+    extra_embeds: Optional[jax.Array] = None,  # (B, I, D) VLM patch embeds
+) -> Tuple[jax.Array, jax.Array]:
+    """→ (hidden (B, S, D), aux_loss scalar)."""
+    cdt = compute_dtype(cfg)
+    x = embed_apply(params["embed"], cfg, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    windows = layer_windows(cfg)
+    per = len(windows)
+
+    def body(carry, blk):
+        x, aux = carry
+        x = constrain(x, "batch", "seq_sp", None)
+        if per == 1:
+            x, a = _apply_sublayer(blk, cfg, x, positions, windows[0])
+            aux = aux + a
+        else:
+            for i in range(per):
+                sub = jax.tree_util.tree_map(lambda v: v[i], blk)
+                x, a = _apply_sublayer(sub, cfg, x, positions, windows[i])
+                aux = aux + a
+        x = constrain(x, "batch", "seq_sp", None)
+        return (x, aux), None
+
+    body = jax.checkpoint(body, policy=flags.remat_policy())
+    (x, aux), _ = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["blocks"],
+        unroll=flags.scan_unroll(),
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return constrain(x, "batch", "seq", None), aux
+
+
+def lm_loss(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # (B, S_txt)
+    loss_mask: Optional[jax.Array] = None,   # (B, S_txt)
+    extra_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ router aux loss)."""
+    hidden, aux = lm_forward(params, cfg, tokens, extra_embeds)
+    n_img = 0 if extra_embeds is None else extra_embeds.shape[1]
+    t = tokens.shape[1]
+    if n_img:
+        # hidden[I-1 .. I+T-2] predicts tokens[0 .. T-1]
+        pred = lax.dynamic_slice_in_dim(hidden, n_img - 1, t, axis=1)
+        targets = tokens
+        mask = loss_mask
+    else:
+        pred = hidden[:, :-1]
+        targets = tokens[:, 1:]
+        mask = None if loss_mask is None else loss_mask[:, 1:]
+    xent = chunked_xent(params["embed"], cfg, pred, targets, mask)
+    loss = xent + cfg.router_aux_coef * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def lm_cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked per-scan-step KV caches (+ logical specs)."""
+    n_steps, per = _n_scan(cfg)
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    cdt = compute_dtype(cfg)
+    windows = layer_windows(cfg)
+
+    def slot_count(w):
+        return min(w, max_len) if w is not None else max_len
+
+    caches = []
+    for i in range(per):
+        sl = slot_count(windows[i])
+        kv = {
+            "k": jnp.zeros((n_steps, batch, hkv, sl, dh), cdt),
+            "v": jnp.zeros((n_steps, batch, hkv, sl, dh), cdt),
+        }
+        caches.append(kv)
+    cache = {f"pos{i}": c for i, c in enumerate(caches)}
+    spec = jax.tree_util.tree_map(
+        lambda _: ("layers", "batch", "kv_heads", None, None), cache
+    )
+    return cache, spec
+
+
+def lm_prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    extra_embeds: Optional[jax.Array] = None,
+    max_len: Optional[int] = None,
+) -> Tuple[jax.Array, PyTree]:
+    """Full-sequence forward that also materializes the KV cache.
+
+    Returns (last-token logits (B, V), cache).  Window layers keep only the
+    trailing ``window`` keys (ring-buffer layout, slot = pos % window).
+    """
+    cdt = compute_dtype(cfg)
+    x = embed_apply(params["embed"], cfg, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cdt), x], axis=1)
+    b, s, _ = x.shape
+    max_len = max(max_len or s, s)
+    positions = jnp.arange(s)[None, :]
+    windows = layer_windows(cfg)
+    per = len(windows)
+
+    def sub_with_cache(p, x, window):
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(p["attn"], cfg, h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kc = jnp.swapaxes(k, 1, 2)                   # (B, Hkv, S, Dh)
+        vc = jnp.swapaxes(v, 1, 2)
+        # cache layout (k/v computed once, reused for attention below)
+        if window is not None and s >= window:
+            # ring layout: slot = pos % window over the last `window` tokens
+            start = s - window
+            roll = s % window
+            kv = {
+                "k": jnp.roll(kc[:, :, start:], shift=roll, axis=2).astype(cdt),
+                "v": jnp.roll(vc[:, :, start:], shift=roll, axis=2).astype(cdt),
+            }
+        else:
+            pad = max_len if window is None else min(window, max_len)
+            kv = {
+                "k": jnp.pad(kc, ((0, 0), (0, 0), (0, pad - s), (0, 0))).astype(cdt),
+                "v": jnp.pad(vc, ((0, 0), (0, 0), (0, pad - s), (0, 0))).astype(cdt),
+            }
+        attn = flash_attention(
+            jnp.swapaxes(q, 1, 2), kc, vc, causal=True, window=window
+        )
+        attn = jnp.swapaxes(attn, 1, 2).reshape(x.shape[0], s, -1)
+        x = x + constrain(
+            attn @ p["attn"]["wo"].astype(cdt), *flags.residual_axes()
+        )
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            y, _ = moe_mod.moe_apply(p["moe"], cfg, h2)
+        else:
+            y = mlp_apply(p["mlp"], cfg, h2)
+        return x + y, kv
+
+    def body(carry, blk):
+        x = carry
+        x = constrain(x, "batch", "seq_sp", None)
+        kvs = {}
+        if per == 1:
+            x, kv = sub_with_cache(blk, x, windows[0])
+            kvs["pos0"] = kv
+        else:
+            for i in range(per):
+                sub = jax.tree_util.tree_map(lambda v: v[i], blk)
+                x, kv = sub_with_cache(sub, x, windows[i])
+                kvs[f"pos{i}"] = kv
+        return x, kvs
+
+    x, cache = lax.scan(body, x, params["blocks"], unroll=flags.scan_unroll())
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed_logits(params["embed"], cfg, x[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+def lm_decode_step(
+    params,
+    cfg: ModelConfig,
+    token: jax.Array,        # (B, 1) int32
+    pos: jax.Array,          # (B,) absolute position of `token`
+    cache: PyTree,
+) -> Tuple[jax.Array, PyTree]:
+    """One-token decode through the scanned stack.  → (logits (B,V), cache)."""
+    x = embed_apply(params["embed"], cfg, token)
+    windows = layer_windows(cfg)
+    per = len(windows)
+
+    def sub_decode(p, x, kv, window):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        attn, kv = attention_decode(p["attn"], cfg, h, pos, kv, window=window)
+        x = x + attn
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            y, _ = moe_mod.moe_apply(p["moe"], cfg, h, no_drop=True)
+        else:
+            y = mlp_apply(p["mlp"], cfg, h)
+        return x + y, kv
+
+    def body(x, xs):
+        blk, kvs = xs
+        new_kvs = {}
+        if per == 1:
+            x, kv = sub_decode(blk, x, kvs["pos0"], windows[0])
+            new_kvs["pos0"] = kv
+        else:
+            for i in range(per):
+                sub = jax.tree_util.tree_map(lambda v: v[i], blk)
+                x, kv = sub_decode(sub, x, kvs[f"pos{i}"], windows[i])
+                new_kvs[f"pos{i}"] = kv
+        return x, new_kvs
+
+    x, new_cache = lax.scan(
+        body, x, (params["blocks"], cache), unroll=flags.scan_unroll()
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed_logits(params["embed"], cfg, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,115 @@
+"""Sharded AdamW + LR schedules (no external deps — optax is not vendored).
+
+Optimizer state mirrors the parameter pytree (m, v in fp32), so GSPMD
+shards it exactly like the FSDP/TP-sharded params — ZeRO-style partitioned
+optimizer state falls out of the sharding rules with no extra code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule", "global_norm"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # Reduced-precision first moment (standard at ≥100B scale): m tolerates
+    # bf16 (it's a smoothed gradient); v stays fp32 (sqrt of tiny values).
+    # Cuts optimizer residency from 8 to 6 bytes/param — the knob that
+    # closes jamba-398B's fit gap (§Perf).
+    m_dtype: str = "float32"
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(cfg.warmup_steps, 1))
+        prog = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+        return cfg.lr * warm * frac
+
+    return lr
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def adamw_init(params: PyTree, cfg: Optional[AdamWConfig] = None) -> PyTree:
+    m_dt = jnp.bfloat16 if cfg and cfg.m_dtype == "bfloat16" else jnp.float32
+    return {
+        "m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=m_dt), params
+        ),
+        "v": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+        ),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads: PyTree,
+    opt_state: PyTree,
+    params: PyTree,
+) -> Tuple[PyTree, PyTree, dict]:
+    """One AdamW step with global-norm clipping; returns (params, state, info)."""
+    count = opt_state["count"] + 1
+    lr = cosine_schedule(cfg)(count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads
+    )
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree_util.tree_map(
+        lambda mm, g: (b1 * mm.astype(jnp.float32) + (1 - b1) * g).astype(
+            mm.dtype
+        ),
+        opt_state["m"],
+        grads,
+    )
+    v = jax.tree_util.tree_map(
+        lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g), opt_state["v"], grads
+    )
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(p, mm, vv):
+        step = (mm.astype(jnp.float32) / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps)
+        return (
+            p.astype(jnp.float32) - lr * (step + cfg.weight_decay * p.astype(jnp.float32))
+        ).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    new_state = {"m": m, "v": v, "count": count}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

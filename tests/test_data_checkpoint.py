@@ -1,0 +1,270 @@
+"""Data pipeline + checkpoint + fault-tolerance + compression tests."""
+
+import dataclasses
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    load_catalog,
+    read_tensor,
+    restore_pytree,
+    save_pytree,
+)
+from repro.configs import get_config
+from repro.core import RecordStore, build_index
+from repro.core.sdfgen import CorpusSpec, generate_corpus
+from repro.data.pipeline import BatchLoader, IndexedDataset
+from repro.data.sampler import FeistelShuffle, GlobalSampler
+from repro.dist.compress import (
+    ErrorFeedbackCompressor,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.runtime.fault import ElasticPlan, FailureDetector, Heartbeat, run_with_failures
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def data():
+    spec = CorpusSpec(n_files=2, records_per_file=400)
+    root = Path(tempfile.mkdtemp()) / "c"
+    generate_corpus(root, spec)
+    store = RecordStore(root)
+    idx = build_index(store)
+    return IndexedDataset(store, idx, seq_len=96), spec
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**30))
+def test_feistel_is_permutation(n, seed):
+    f = FeistelShuffle(n, seed)
+    step = max(1, n // 97)
+    seen = [f(i) for i in range(0, n, step)]
+    assert all(0 <= x < n for x in seen)
+    if n <= 512:
+        full = [f(i) for i in range(n)]
+        assert sorted(full) == list(range(n))
+
+
+@pytest.mark.parametrize("n_dp", [1, 2, 4, 8])
+def test_sampler_elastic_equivalence(n_dp, data):
+    ds, _ = data
+    smp = GlobalSampler(len(ds), global_batch=8)
+    want = smp.all_ids(step=5)
+    got = []
+    for r in range(n_dp):
+        got += smp.example_ids(5, r, n_dp)
+    assert got == want
+
+
+def test_sampler_covers_epoch_without_repeats(data):
+    ds, _ = data
+    smp = GlobalSampler(100, global_batch=10)
+    seen = []
+    for step in range(10):
+        seen += smp.all_ids(step)
+    assert sorted(seen) == list(range(100))  # one full epoch, no dup/miss
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+def test_batch_shapes_and_masks(data):
+    ds, _ = data
+    smp = GlobalSampler(len(ds), global_batch=4)
+    b = ds.batch_for(smp, 0, 0, 1)
+    assert b["tokens"].shape == (4, 96) and b["tokens"].dtype == np.int32
+    assert b["loss_mask"].shape == (4, 96)
+    assert (b["loss_mask"].sum(1) > 0).all()
+
+
+def test_loader_prefetch_and_straggler(data):
+    ds, _ = data
+    smp = GlobalSampler(len(ds), global_batch=4)
+    calls = {"n": 0}
+
+    def flaky(step):
+        calls["n"] += 1
+        if step == 1 and calls["n"] < 3:
+            time.sleep(0.4)
+        return ds.batch_for(smp, step, 0, 1)
+
+    bl = BatchLoader(ds, smp, deadline_s=0.05, fetch_fn=flaky)
+    bl.start()
+    steps = [bl.get(timeout=30)[0] for _ in range(3)]
+    bl.stop()
+    assert steps == [0, 1, 2]
+    assert bl.stats.deadline_misses >= 1 and bl.stats.retries >= 1
+
+
+def test_fetch_verification_detects_corruption(data):
+    ds, _ = data
+    key = ds.keys[3]
+    fname, off = ds.index.lookup(key)
+    path = ds.store.path_of(fname)
+    raw = bytearray(path.read_bytes())
+    # corrupt one structural byte of that record's atom block: flip the
+    # first carbon's element symbol (changes the canonical id)
+    probe = raw[off : off + 2000].find(b" C  ")
+    assert probe > 0
+    raw[off + probe + 1] = ord("N")
+    backup = path.read_bytes()
+    path.write_bytes(bytes(raw))
+    try:
+        before = ds.stats.verify_failures
+        out = ds.fetch_many([key])
+        assert key not in out
+        assert ds.stats.verify_failures == before + 1
+    finally:
+        path.write_bytes(backup)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint catalog
+# ---------------------------------------------------------------------------
+
+def test_catalog_partial_restore_and_offsets(tmp_path):
+    tree = {
+        "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "nested": {"b": np.ones((5,), np.int64)},
+    }
+    d = tmp_path / "ck"
+    save_pytree(tree, d, meta={"step": 9})
+    cat = load_catalog(d)
+    assert set(cat) == {"w", "nested/b"}
+    # O(1) partial restore of one tensor via its byte offset
+    w = read_tensor(d, cat["w"])
+    np.testing.assert_array_equal(w, tree["w"])
+    # offsets are disjoint and ordered
+    spans = sorted((e.byte_offset, e.byte_offset + e.nbytes) for e in cat.values())
+    for (a0, a1), (b0, _) in zip(spans, spans[1:]):
+        assert a1 <= b0
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=2)
+    tree = {"x": np.zeros((4,), np.float32)}
+    for s in (1, 2, 3, 4):
+        tree["x"] = tree["x"] + 1
+        mgr.save(s, tree)
+    assert mgr.steps() == [3, 4]
+    step, back = mgr.restore({"x": np.zeros((4,), np.float32)})
+    assert step == 4 and back["x"][0] == 4
+
+
+def test_manager_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=3)
+    tree = {"x": np.random.default_rng(0).normal(size=(256, 256)).astype(np.float32)}
+    mgr.save(7, tree, blocking=False)
+    mgr.wait()
+    _, back = mgr.restore(tree)
+    np.testing.assert_array_equal(back["x"], tree["x"])
+
+
+# ---------------------------------------------------------------------------
+# trainer: crash + elastic recovery
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_config("yi-6b"),
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=300,
+    )
+
+
+def test_trainer_crash_restore_continues_exactly(data, tmp_path):
+    ds, _ = data
+    tcfg = TrainerConfig(seq_len=96, global_batch=4, steps=9, ckpt_every=3,
+                         opt=AdamWConfig(warmup_steps=2, total_steps=9))
+    # uninterrupted reference run
+    tr_ref = Trainer(_tiny_cfg(), tcfg, ds, tmp_path / "ref")
+    _, _, hist_ref = tr_ref.run()
+    # crashed + resumed run
+    tr_a = Trainer(_tiny_cfg(), tcfg, ds, tmp_path / "crash")
+    reached, _, hist_a = tr_a.run(die_at_step=5)
+    assert reached == 5 and tr_a.ckpt.latest_step() == 3
+    tr_b = Trainer(_tiny_cfg(), tcfg, ds, tmp_path / "crash")
+    _, _, hist_b = tr_b.run()
+    assert hist_b[0]["step"] == 3
+    # loss trajectory after resume matches the uninterrupted run bitwise-ish
+    ref = {h["step"]: h["loss"] for h in hist_ref}
+    for h in hist_b:
+        assert abs(h["loss"] - ref[h["step"]]) < 1e-4, (h["step"], h["loss"], ref[h["step"]])
+
+
+def test_run_with_failures_elastic_plan(tmp_path, data):
+    ds, _ = data
+    log_steps = []
+
+    def chunk(start, until, n_dp):
+        log_steps.append((start, until, n_dp))
+        return until, {}
+
+    log = run_with_failures(12, chunk, fail_at={4: 1, 8: 1}, initial_dp=4)
+    kinds = [e["kind"] for e in log.events]
+    assert kinds.count("failure") == 2
+    assert log_steps == [(0, 4, 4), (4, 8, 3), (8, 12, 2)]
+    assert ElasticPlan.for_survivors(3, 16).n_dp == 3
+
+
+def test_heartbeat_detector(tmp_path):
+    hb = Heartbeat(tmp_path, 0)
+    hb.beat(5)
+    det = FailureDetector(tmp_path, n_workers=2, timeout=10.0)
+    assert det.alive() == [0] and det.dead() == [1]
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_quantization_bounds():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32)) * 3.0
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_preserves_signal_over_steps():
+    """Σ compressed grads ≈ Σ true grads (error feedback drains residual)."""
+    comp = ErrorFeedbackCompressor()
+    params = {"w": jnp.zeros((32,), jnp.float32)}
+    state = {"ef_residual": comp.init(params)}
+    rng = np.random.default_rng(1)
+    total_true = np.zeros((32,), np.float32)
+    total_comp = np.zeros((32,), np.float32)
+    for _ in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=(32,)).astype(np.float32) * 1e-3)}
+        cg, state = comp.apply(g, state)
+        total_true += np.asarray(g["w"])
+        total_comp += np.asarray(cg["w"])
+    resid = np.asarray(state["ef_residual"]["w"])
+    np.testing.assert_allclose(total_comp + resid, total_true, atol=1e-5)
+
+
+def test_trainer_with_compression_trains(data, tmp_path):
+    ds, _ = data
+    tcfg = TrainerConfig(seq_len=96, global_batch=4, steps=6, ckpt_every=6,
+                         compress_grads=True,
+                         opt=AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=6))
+    tr = Trainer(_tiny_cfg(), tcfg, ds, tmp_path / "comp")
+    _, state, hist = tr.run()
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert "ef_residual" in state

@@ -1,0 +1,77 @@
+"""Beyond-paper index extensions: incremental updates + binary sidecar.
+
+Both are the paper's own §VIII future-work items, implemented and tested.
+"""
+
+import tempfile
+from pathlib import Path
+
+import pytest
+
+from repro.core import RecordStore, build_index, extract
+from repro.core.index import BinaryIndex, file_fingerprints, update_index
+from repro.core.sdfgen import CorpusSpec, generate_corpus, record_text_for_cid
+
+
+@pytest.fixture()
+def corpus(tmp_path):
+    spec = CorpusSpec(n_files=3, records_per_file=200)
+    root = tmp_path / "c"
+    generate_corpus(root, spec)
+    return RecordStore(root), spec
+
+
+def test_incremental_update_only_rescans_changed(corpus):
+    store, spec = corpus
+    idx = build_index(store)
+    fp = file_fingerprints(store)
+    n0 = len(idx)
+
+    # append two records to one file (database growth)
+    target = store.files()[1]
+    with open(target, "a", encoding="utf-8", newline="\n") as f:
+        for cid in (spec.n_records + 1000, spec.n_records + 1001):
+            f.write(record_text_for_cid(cid, spec))
+            f.write("$$$$\n")
+
+    fp2, summary = update_index(idx, store, fp)
+    assert summary["rescanned"] == 1           # only the appended file
+    assert len(idx) == n0 + 2
+    # new record is addressable
+    txt = record_text_for_cid(spec.n_records + 1000, spec)
+    from repro.core.records import extract_property
+    from repro.core.sdfgen import PROP_ID
+
+    key = extract_property(txt, PROP_ID)
+    loc = idx.lookup(key)
+    assert loc is not None and loc[0] == target.name
+
+    # no-op second update
+    _, summary2 = update_index(idx, store, fp2)
+    assert summary2 == {"rescanned": 0, "dropped": 0, "added": 0}
+
+
+def test_incremental_update_handles_removed_file(corpus):
+    store, spec = corpus
+    idx = build_index(store)
+    fp = file_fingerprints(store)
+    victim = store.files()[2]
+    victim.unlink()
+    _, summary = update_index(idx, store, fp)
+    assert summary["dropped"] == spec.records_per_file
+    assert len(idx) == spec.n_records - spec.records_per_file
+    # index remains extraction-consistent
+    res = extract(store, idx, list(idx.entries.keys())[:20])
+    assert res.found == 20 and not res.mismatches
+
+
+def test_binary_sidecar_lookup_matches_dict(corpus, tmp_path):
+    store, _ = corpus
+    idx = build_index(store)
+    path = tmp_path / "ix.npz"
+    idx.save_binary(path)
+    bx = BinaryIndex(path)
+    assert len(bx) == len(idx)
+    for key in list(idx.entries.keys())[::37]:
+        assert bx.lookup(key) == idx.lookup(key)
+    assert bx.lookup("InChI=1S/NOT_A_REAL_ID") is None

@@ -1,0 +1,70 @@
+"""Launcher entry-point smoke tests (subprocess, real CLI surface)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(args, timeout=500):
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", *args],
+        capture_output=True, text=True, env=env, timeout=timeout, cwd=ROOT,
+    )
+
+
+def test_train_launcher_smoke(tmp_path):
+    proc = _run([
+        "repro.launch.train", "--arch", "yi-6b", "--steps", "6",
+        "--seq-len", "64", "--global-batch", "4",
+        "--corpus-records", "400", "--ckpt-every", "3",
+        "--workdir", str(tmp_path / "run"),
+    ])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "done: 6 steps" in proc.stdout
+    assert (tmp_path / "run" / "ckpt").exists()
+
+
+def test_serve_launcher_smoke():
+    proc = _run([
+        "repro.launch.serve", "--arch", "yi-6b",
+        "--max-new-tokens", "4", "--max-len", "64",
+        "--prompts", "InChI=1S/C4",
+    ])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "tok/s" in proc.stdout
+
+
+def test_dryrun_launcher_single_cell(tmp_path):
+    out = tmp_path / "cell.jsonl"
+    proc = _run([
+        "repro.launch.dryrun", "--arch", "whisper-small",
+        "--shape", "train_4k", "--out", str(out),
+    ], timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+    import json
+
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["flops_per_device"] > 0
+    assert rec["mesh"] == "16x16"
+
+
+def test_dryrun_skipped_cell(tmp_path):
+    out = tmp_path / "skip.jsonl"
+    proc = _run([
+        "repro.launch.dryrun", "--arch", "qwen2-72b",
+        "--shape", "long_500k", "--out", str(out),
+    ])
+    assert proc.returncode == 0
+    import json
+
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["status"] == "skipped"
