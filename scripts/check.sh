@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# One-entry-point build check: tier-1 test suite + a fast interpret-mode
+# smoke of the sorted_probe Pallas kernel (stage B runs through the Pallas
+# interpreter, so kernel regressions surface even on CPU-only machines).
+#
+# Usage: scripts/check.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q "$@"
+
+echo "== kernel smoke: sorted_probe (interpret mode) =="
+python - <<'PY'
+import numpy as np
+import jax.numpy as jnp
+from repro.kernels.sorted_probe.ops import sorted_probe_pallas
+from repro.kernels.sorted_probe.ref import sorted_probe_ref
+
+rng = np.random.default_rng(0)
+table = np.unique(
+    rng.integers(0, 2**32 - 1, size=(512, 2), dtype=np.uint32), axis=0
+)
+hits = table[rng.integers(0, len(table), size=64)]
+misses = rng.integers(0, 2**32 - 1, size=(64, 2), dtype=np.uint32)
+queries = jnp.asarray(np.concatenate([hits, misses]))
+table = jnp.asarray(table)
+
+found_k, pos_k = sorted_probe_pallas(queries, table, interpret=True)
+found_r, pos_r = sorted_probe_ref(queries, table)
+assert bool(jnp.all(found_k == found_r)), "found mask mismatch vs reference"
+assert bool(jnp.all(jnp.where(found_k, pos_k, 0) == jnp.where(found_r, pos_r, 0)))
+assert int(found_k[:64].sum()) == 64, "planted hits not all found"
+print(f"sorted_probe interpret OK: {int(found_k.sum())}/{len(queries)} hits")
+PY
+
+echo "== all checks passed =="

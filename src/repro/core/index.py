@@ -157,7 +157,7 @@ class ByteOffsetIndex:
 
     # -- persistence (binary sidecar: packed digests for the TPU probe path) --
 
-    def save_binary(self, path: Path) -> int:
+    def save_binary(self, path: Path) -> Tuple[Path, int]:
         """npz sidecar: uint64 digest of each key + file ids + offsets.
 
         Digests here are *pointers into the CSV truth*, not identifiers of
@@ -165,8 +165,14 @@ class ByteOffsetIndex:
         verifies against the full key, exactly like Algorithm 3's defensive
         validation (a digest collision degrades to an extra verify, never to
         a wrong record).
+
+        The ``.npz`` suffix is normalized up front (``np.savez`` appends it
+        when missing), and the written path is returned with its size so
+        the reported size always refers to the file actually on disk.
         """
         path = Path(path)
+        if path.suffix != ".npz":
+            path = path.with_name(path.name + ".npz")
         keys: List[str] = []
         fnames: List[str] = []
         offs: List[int] = []
@@ -190,7 +196,7 @@ class ByteOffsetIndex:
             file_names=np.array(file_names),
             keys=np.array(keys, dtype=object)[order].astype(str),
         )
-        return Path(str(path) if str(path).endswith(".npz") else str(path) + ".npz").stat().st_size
+        return path, path.stat().st_size
 
 
 class BinaryIndex:

@@ -1,0 +1,41 @@
+"""Distribution layer: logical-axis sharding rules + gradient compression.
+
+Two submodules, both mesh-optional (single-device code pays nothing):
+
+* :mod:`repro.dist.logical` — named logical axes ("batch", "heads",
+  "embed", …) mapped to mesh axes by a context-managed rule table.
+  Models annotate activations with :func:`~repro.dist.logical.constrain`
+  and return parameter *specs* (tuples of logical names); the launcher
+  turns specs into NamedShardings (:mod:`repro.launch.sharding`).
+* :mod:`repro.dist.compress` — int8 / top-k gradient compression with
+  error feedback, hooked between grad computation and the optimizer by
+  :mod:`repro.train.loop`.
+"""
+
+from repro.dist.logical import (
+    AxisRules,
+    DEFAULT_RULES,
+    axis_rules,
+    constrain,
+    current_rules,
+    divisible_spec,
+)
+from repro.dist.compress import (
+    ErrorFeedbackCompressor,
+    dequantize_int8,
+    make_compressor,
+    quantize_int8,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "axis_rules",
+    "constrain",
+    "current_rules",
+    "divisible_spec",
+    "ErrorFeedbackCompressor",
+    "dequantize_int8",
+    "make_compressor",
+    "quantize_int8",
+]

@@ -1,0 +1,157 @@
+"""Gradient compression with error feedback for bandwidth-bound training.
+
+At pod scale the all-reduce of fp32 gradients is the dominant wire cost of
+a data-parallel step.  This module provides the standard remedy pair:
+
+* **Lossy per-leaf compression** — :func:`quantize_int8` (symmetric int8,
+  one fp32 scale per leaf: 4× fewer bytes on the wire) and a magnitude
+  top-k sparsifier.  Both are pure jnp and jit-compatible, so the
+  compressor runs *inside* the jitted train step.
+* **Error feedback** (Seide et al. 2014, Karimireddy et al. 2019) —
+  :class:`ErrorFeedbackCompressor` keeps a per-leaf fp32 residual of what
+  compression discarded and adds it back before compressing the next
+  step.  The telescoping sum ``Σ compressed + residual == Σ true`` holds
+  exactly, so the optimizer sees an unbiased gradient stream over time
+  and convergence matches uncompressed training to first order.
+
+The trainer hooks a compressor between grad computation and the AdamW
+update (:mod:`repro.train.loop`); which one — if any — is chosen by
+``TrainerConfig`` through :func:`make_compressor`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "topk_mask",
+    "ErrorFeedbackCompressor",
+    "make_compressor",
+]
+
+PyTree = Any
+
+# Guards the scale against an all-zero leaf (0/0 → NaN grads downstream).
+_MIN_SCALE = 1e-12
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-leaf int8 quantization.
+
+    Returns ``(q, scale)`` with ``q = round(x / scale)`` in [-127, 127]
+    and ``scale = max|x| / 127`` (an fp32 scalar), so the round-trip error
+    is bounded by ``scale / 2`` elementwise.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax / 127.0, _MIN_SCALE)
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_int8` (fp32 output)."""
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    """Keep the ``frac`` largest-|x| entries of a leaf, zero the rest.
+
+    Threshold via a full sort of |x| — leaves are weight-shaped (≤ a few
+    M elements), and the sort happens once per leaf per step inside an
+    already-compiled train step.
+    """
+    xf = x.astype(jnp.float32)
+    flat = jnp.abs(xf.reshape(-1))
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jnp.sort(flat)[flat.shape[0] - k]
+    return jnp.where(jnp.abs(xf) >= thresh, xf, 0.0)
+
+
+@dataclasses.dataclass
+class ErrorFeedbackCompressor:
+    """Per-leaf lossy compression + error-feedback residual.
+
+    The residual pytree lives in the train state under :attr:`state_key`
+    (the trainer inits it via :meth:`init` and the checkpoint manager
+    persists it like any other state leaf, so crash recovery preserves
+    the accumulated error).  :meth:`apply` is pure and jit-compatible:
+
+        grads, state = compressor.apply(grads, state)
+
+    ``method`` selects the lossy step: "int8" (default) or "topk"
+    (magnitude sparsification at :attr:`topk_frac`).
+    """
+
+    method: str = "int8"
+    topk_frac: float = 0.1
+    state_key: str = "ef_residual"
+
+    def __post_init__(self):
+        if self.method not in ("int8", "topk"):
+            raise ValueError(f"unknown compression method {self.method!r}")
+
+    def init(self, params: PyTree) -> PyTree:
+        """Zero fp32 residual, one leaf per parameter."""
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+    def _compress_leaf(self, g: jax.Array) -> jax.Array:
+        if self.method == "topk":
+            return topk_mask(g, self.topk_frac)
+        q, s = quantize_int8(g)
+        return dequantize_int8(q, s)
+
+    def apply(
+        self, grads: PyTree, state: Dict[str, Any]
+    ) -> Tuple[PyTree, Dict[str, Any]]:
+        """Compress ``grads`` (+ carried residual), update the residual.
+
+        ``state`` is any dict holding the residual under :attr:`state_key`
+        — the full train state in the trainer, a bare one-key dict in
+        tests.  Returns the decompressed (wire-equivalent) grads and the
+        state with the new residual.
+        """
+        residual = state[self.state_key]
+        total = jax.tree_util.tree_map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual
+        )
+        compressed = jax.tree_util.tree_map(self._compress_leaf, total)
+        new_residual = jax.tree_util.tree_map(
+            lambda t, c: t - c, total, compressed
+        )
+        new_state = dict(state)
+        new_state[self.state_key] = new_residual
+        return compressed, new_state
+
+
+# name → constructor kwargs; the names are what TrainerConfig / the train
+# launcher accept, so adding a scheme here surfaces it everywhere at once.
+_COMPRESSORS: Dict[str, Dict[str, Any]] = {
+    "int8_ef": {"method": "int8"},
+    "topk_ef": {"method": "topk"},
+}
+
+
+def make_compressor(
+    name: Optional[str], **overrides: Any
+) -> Optional[ErrorFeedbackCompressor]:
+    """Build a compressor by name ("int8_ef", "topk_ef"); None/"none" → None."""
+    if name is None or name == "none":
+        return None
+    try:
+        kwargs = dict(_COMPRESSORS[name])
+    except KeyError:
+        raise ValueError(
+            f"unknown compressor {name!r}; choose from "
+            f"{sorted(_COMPRESSORS)} or 'none'"
+        ) from None
+    kwargs.update(overrides)
+    return ErrorFeedbackCompressor(**kwargs)

@@ -11,7 +11,7 @@ from typing import Optional, Tuple
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "dp_axes"]
+__all__ = ["make_production_mesh", "make_mesh", "mesh_from_str", "dp_axes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,6 +26,23 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     if len(shape) != len(axes):
         raise ValueError(f"shape {shape} / axes {axes} mismatch")
     return jax.make_mesh(shape, axes)
+
+
+def mesh_from_str(spec: str):
+    """``"DATAxMODEL"`` → mesh, or None for the 1-device ``"1x1"`` case.
+
+    The launchers' shared CLI surface: validates the shape string so a
+    typo fails with the expected format instead of an unpack traceback.
+    """
+    parts = spec.lower().split("x")
+    if len(parts) != 2 or not all(p.isdigit() for p in parts):
+        raise ValueError(f"bad mesh {spec!r}; expected DATAxMODEL, e.g. 2x4")
+    d, m = int(parts[0]), int(parts[1])
+    if d < 1 or m < 1:
+        raise ValueError(f"bad mesh {spec!r}; extents must be >= 1")
+    if d * m == 1:
+        return None
+    return make_mesh((d, m), ("data", "model"))
 
 
 def dp_axes(mesh) -> Tuple[str, ...]:

@@ -3,6 +3,11 @@
 Builds the engine for the requested architecture (reduced config on CPU;
 the dry-run proves the full configs lower for the decode shapes) and
 serves a batch of prompts, reporting prefill/decode timings.
+
+``--mesh DATAxMODEL`` serves sharded: params go to their logical-rule
+shardings (:mod:`repro.dist.logical`), the request batch spreads over the
+data axis, and batched decode runs under the mesh so every ``constrain``
+in the model takes effect.  The default ("1x1") stays single-device.
 """
 
 from __future__ import annotations
@@ -12,6 +17,7 @@ import argparse
 import jax
 
 from repro.configs import ARCH_NAMES, get_config
+from repro.launch.mesh import mesh_from_str
 from repro.models.registry import build_model
 from repro.serve.engine import Engine, ServeConfig
 
@@ -22,6 +28,7 @@ def main():
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 2x4")
     ap.add_argument("--prompts", nargs="*", default=[
         "InChI=1S/C12H22O2/", "InChI=1S/C8H9NO2/",
     ])
@@ -32,12 +39,17 @@ def main():
         cfg = cfg.smoke()
     if cfg.family == "vlm":
         print("note: vlm frontend stubbed — serving text-only prompts")
+    mesh = mesh_from_str(args.mesh)
     api = build_model(cfg)
-    params, _ = api.init(jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, ServeConfig(
-        max_new_tokens=args.max_new_tokens, max_len=args.max_len))
+    params, specs = api.init(jax.random.PRNGKey(0))
+    eng = Engine(
+        cfg, params,
+        ServeConfig(max_new_tokens=args.max_new_tokens, max_len=args.max_len),
+        mesh=mesh, param_specs=specs,
+    )
     print(f"serving {len(args.prompts)} prompts on {args.arch} "
-          f"({'full' if args.full_config else 'smoke'} config)…")
+          f"({'full' if args.full_config else 'smoke'} config, "
+          f"mesh {args.mesh})…")
     for i, r in enumerate(eng.generate(args.prompts)):
         print(f"[{i}] prefill {r.prefill_s*1e3:.0f} ms, "
               f"{r.tokens_per_s:.1f} tok/s → {r.text[:60]!r}")

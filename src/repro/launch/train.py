@@ -19,7 +19,7 @@ from repro.configs import ARCH_NAMES, get_config
 from repro.core import RecordStore, build_index
 from repro.core.sdfgen import CorpusSpec, generate_corpus
 from repro.data.pipeline import IndexedDataset
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import mesh_from_str
 from repro.train.optimizer import AdamWConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -35,6 +35,11 @@ def main():
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--compressor", default="int8_ef",
+                    choices=["int8_ef", "topk_ef"],
+                    help="gradient compression scheme (with --compress-grads)")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="kept fraction for --compressor topk_ef")
     ap.add_argument("--workdir", default="runs/train")
     ap.add_argument("--corpus-records", type=int, default=4000)
     ap.add_argument("--ckpt-every", type=int, default=10)
@@ -43,8 +48,7 @@ def main():
     cfg = get_config(args.arch)
     if not args.full_config:
         cfg = cfg.smoke()
-    d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = make_mesh((d, m), ("data", "model")) if d * m > 1 else None
+    mesh = mesh_from_str(args.mesh)
 
     root = Path(args.workdir) / "corpus"
     spec = CorpusSpec(n_files=4, records_per_file=args.corpus_records // 4)
@@ -59,6 +63,8 @@ def main():
         ckpt_every=args.ckpt_every,
         grad_accum=args.grad_accum,
         compress_grads=args.compress_grads,
+        compressor=args.compressor,
+        topk_frac=args.topk_frac,
         opt=AdamWConfig(warmup_steps=max(2, args.steps // 10),
                         total_steps=args.steps),
     )
@@ -70,20 +76,12 @@ def main():
                   f"gnorm {rec['grad_norm']:.2f} {rec['dt']*1e3:.0f} ms",
                   flush=True)
 
-    ctx = mesh or _nullcontext()
-    with ctx:
-        final, _, hist = tr.run(on_step=log)
+    # Trainer.run enters the mesh context itself (sharding rules active
+    # while the step function traces).
+    final, _, hist = tr.run(on_step=log)
     print(f"done: {final} steps, loss {hist[0]['loss']:.4f} → "
           f"{hist[-1]['loss']:.4f}, checkpoints at "
           f"{tr.ckpt.root} (latest {tr.ckpt.latest_step()})")
-
-
-class _nullcontext:
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *a):
-        return False
 
 
 if __name__ == "__main__":

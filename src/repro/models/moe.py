@@ -28,7 +28,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.dist.logical import constrain, current_rules, _current_mesh
+from repro.dist.logical import current_rules, _current_mesh
 from repro.models.common import compute_dtype, dense_init
 
 __all__ = ["moe_init", "moe_apply"]
@@ -141,8 +141,15 @@ def moe_apply(
             return t_tokens
         return max(1, int(cfg.capacity_factor * t_tokens * k / e))
 
-    if mesh is None or "model" not in mesh.axis_names:
-        # single-device / unsharded path: all experts local
+    # Axis resolution comes from the active rule table: "experts" names the
+    # expert-parallel axis, "batch"/"embed" the dp/FSDP groups — so
+    # `axis_rules` overrides steer the shard_map path like any constrain.
+    rules = current_rules()
+    names = mesh.axis_names if mesh is not None else ()
+    mdl = rules.mesh_axes("experts", names)
+
+    if mesh is None or not isinstance(mdl, str):
+        # single-device / no-expert-axis path: all experts local
         t = b * s
         y, aux, _ = _local_moe(
             x, params["router"], params["wg"], params["wu"], params["wd"],
@@ -150,10 +157,12 @@ def moe_apply(
         )
         return y, aux
 
-    rules = current_rules()
-    names = mesh.axis_names
-    dp = tuple(a for a in ("pod", "data") if a in names)
-    mdl = "model"
+    def _axes(logical):
+        got = rules.mesh_axes(logical, names)
+        got = () if got is None else ((got,) if isinstance(got, str) else got)
+        return tuple(a for a in got if a != mdl)
+
+    dp = _axes("batch")
     n_model = mesh.shape[mdl]
     n_dp = 1
     for a in dp:
@@ -169,8 +178,8 @@ def moe_apply(
     t_local = (b // n_dp) * s
     cap = cap_for(t_local)
 
-    # FSDP axes for expert weights (matches the "embed" rule: pod+data)
-    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    # FSDP axes for expert weights (the "embed" rule: pod+data by default)
+    fsdp = _axes("embed")
     fsdp_entry = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
 
     def shard_fn(x_l, router, wg_l, wu_l, wd_l):
@@ -201,11 +210,19 @@ def moe_apply(
         P(mdl, None, fsdp_entry),                 # wd (E→model, F, D→pod+data)
     )
     out_specs = (P(batch_axes, None, None), P())
-    y, aux = jax.shard_map(
-        shard_fn,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        check_vma=False,
-    )(x, params["router"], params["wg"], params["wu"], params["wd"])
+    if hasattr(jax, "shard_map"):  # jax >= 0.6 (check_vma replaced check_rep)
+        smap = partial(
+            jax.shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        smap = partial(
+            _shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+    y, aux = smap(shard_fn)(
+        x, params["router"], params["wg"], params["wu"], params["wd"]
+    )
     return y, aux

@@ -6,10 +6,19 @@ then decoded token-by-token with per-sequence positions until EOS or the
 token budget.  Per-sequence positions (not a scalar clock) are what real
 continuous-batching serving needs — finished sequences keep their cache
 rows and are masked out of sampling.
+
+Sharded serving: pass ``mesh`` (and the ``param_specs`` returned by
+``api.init``) and the engine device_puts the weights to their logical
+shardings, shards the batch over the data-parallel axes, and runs prefill
+and every decode step inside the mesh context so the models' ``constrain``
+annotations (:mod:`repro.dist.logical`) take effect — batched decode then
+shards across devices exactly like the dry-run's serve cells.  Without a
+mesh nothing changes: single-device serving traces the identical jaxpr.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -20,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.data.tokenizer import ByteTokenizer
+from repro.launch.sharding import batch_shardings, replicated, shardings_from_specs
 from repro.models.registry import ModelApi, build_model
 
 __all__ = ["ServeConfig", "Engine", "GenerationResult"]
@@ -49,16 +59,45 @@ class GenerationResult:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig()):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        scfg: ServeConfig = ServeConfig(),
+        mesh=None,
+        param_specs=None,
+    ):
         self.cfg = cfg
         self.api = build_model(cfg)
-        self.params = params
         self.scfg = scfg
+        self.mesh = mesh
         self.tok = ByteTokenizer()
+        if mesh is not None:
+            sh = (
+                shardings_from_specs(mesh, param_specs, params)
+                if param_specs is not None
+                else replicated(mesh)
+            )
+            params = jax.device_put(params, sh)
+        self.params = params
         self._prefill = jax.jit(
             lambda p, batch: self.api.prefill(p, batch, max_len=scfg.max_len)
         )
         self._decode = jax.jit(self.api.decode_step, donate_argnums=(3,))
+
+    def _mesh_ctx(self):
+        """The mesh context (activates the sharding rules) or a no-op."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _shard_batch(self, extras: Dict[str, Any]) -> Dict[str, Any]:
+        """Spread the request batch over the mesh's data-parallel axes."""
+        if self.mesh is None:
+            return extras
+        sh = batch_shardings(
+            self.mesh,
+            {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in extras.items()},
+        )
+        return {k: jax.device_put(v, sh[k]) for k, v in extras.items()}
 
     def _pad_prompts(self, prompts: List[List[int]]) -> Tuple[np.ndarray, np.ndarray]:
         """Left-align prompts, pad right to the longest (positions differ)."""
@@ -84,8 +123,10 @@ class Engine:
                 (b, self.cfg.n_img_tokens, self.cfg.d_model), jnp.float32
             )
 
+        extras = self._shard_batch(extras)
         t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, extras)
+        with self._mesh_ctx():
+            logits, cache = self._prefill(self.params, extras)
         logits.block_until_ready()
         prefill_s = time.perf_counter() - t0
 
@@ -110,7 +151,8 @@ class Engine:
             done |= np.asarray(cur[:, 0] == self.tok.eos_id)
             if done.all():
                 break
-            logits, cache = self._decode(self.params, cur, pos, cache)
+            with self._mesh_ctx():
+                logits, cache = self._decode(self.params, cur, pos, cache)
             if self.scfg.greedy:
                 nxt = jnp.argmax(logits, -1)
             else:

@@ -10,6 +10,7 @@ the mesh and the dp extent are constructor parameters, everything else
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from pathlib import Path
@@ -23,7 +24,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import BatchLoader, IndexedDataset
 from repro.data.sampler import GlobalSampler
-from repro.dist.compress import ErrorFeedbackCompressor
+from repro.dist.compress import ErrorFeedbackCompressor, make_compressor
 from repro.models.registry import ModelApi, build_model
 from repro.runtime.fault import Heartbeat
 from repro.train.loop import make_train_state, make_train_step
@@ -41,8 +42,18 @@ class TrainerConfig:
     keep_last: int = 3
     grad_accum: int = 1
     compress_grads: bool = False
+    # compression scheme when compress_grads is set — a repro.dist.compress
+    # registry name ("int8_ef", "topk_ef"); topk_frac only applies to topk.
+    compressor: str = "int8_ef"
+    topk_frac: float = 0.1
     seed: int = 0
     opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+    def make_compressor(self) -> Optional[ErrorFeedbackCompressor]:
+        """The configured gradient compressor, or None when disabled."""
+        if not self.compress_grads:
+            return None
+        return make_compressor(self.compressor, topk_frac=self.topk_frac)
 
 
 class Trainer:
@@ -71,13 +82,9 @@ class Trainer:
         )
         self.ckpt = CheckpointManager(self.workdir / "ckpt", keep_last=tcfg.keep_last)
         self.heartbeat = Heartbeat(self.workdir, dp_rank)
-        compressor = None
-        self._compressor = None
-        if tcfg.compress_grads:
-            self._compressor = ErrorFeedbackCompressor()
-            compressor = self._compressor
+        self._compressor = tcfg.make_compressor()
         self._step_fn = jax.jit(
-            make_train_step(self.api, tcfg.opt, tcfg.grad_accum, compressor),
+            make_train_step(self.api, tcfg.opt, tcfg.grad_accum, self._compressor),
             donate_argnums=(0,),
         )
 
@@ -113,7 +120,15 @@ class Trainer:
         ``die_at_step`` simulates a node failure: the trainer stops without
         a final checkpoint, exactly like a SIGKILL (recovery must come from
         the last periodic checkpoint).
+
+        Runs inside the trainer's mesh context (when one was given), so
+        the step function traces with the logical sharding rules active —
+        every ``constrain`` in the model resolves against this mesh.
         """
+        with self.mesh if self.mesh is not None else contextlib.nullcontext():
+            return self._run(until_step, state, on_step, die_at_step)
+
+    def _run(self, until_step, state, on_step, die_at_step):
         until = until_step if until_step is not None else self.tcfg.steps
         if state is None:
             start, state = self.maybe_restore(self.init_state())

@@ -1,0 +1,166 @@
+"""Test-suite bootstrap: offline fallback shim for ``hypothesis``.
+
+The property tests use a small slice of the hypothesis API (``given`` /
+``settings`` / a handful of strategies).  On machines without network
+access the package may be missing — rather than losing 5 test modules at
+collection, this conftest installs a minimal deterministic stand-in into
+``sys.modules`` *before* the test modules import.
+
+The shim is NOT hypothesis: no shrinking, no example database, no
+coverage-guided search.  It draws ``max_examples`` pseudo-random examples
+from a fixed seed (plus min/max boundary examples for integer ranges), so
+a property failure is reproducible but less thoroughly hunted.  When real
+hypothesis is importable it is used untouched.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+def _install_hypothesis_shim() -> None:
+    class Strategy:
+        """Base: a deterministic ``example(rng, i)`` drawer."""
+
+        def example(self, rng: random.Random, i: int):  # pragma: no cover
+            raise NotImplementedError
+
+    class Integers(Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def example(self, rng, i):
+            # first two draws hit the boundaries — cheap edge coverage
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rng.randint(self.lo, self.hi)
+
+    class Floats(Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def example(self, rng, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rng.uniform(self.lo, self.hi)
+
+    class SampledFrom(Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng, i):
+            if i < len(self.elements):
+                return self.elements[i]
+            return rng.choice(self.elements)
+
+    class Characters(Strategy):
+        def __init__(self, min_codepoint=32, max_codepoint=126, **_):
+            self.lo, self.hi = int(min_codepoint), int(max_codepoint)
+
+        def example(self, rng, i):
+            return chr(rng.randint(self.lo, self.hi))
+
+    class Text(Strategy):
+        def __init__(self, alphabet=None, min_size=0, max_size=None):
+            self.alphabet = alphabet
+            self.min_size = int(min_size)
+            self.max_size = int(max_size) if max_size is not None else self.min_size + 20
+
+        def example(self, rng, i):
+            n = rng.randint(self.min_size, self.max_size)
+            out = []
+            for _ in range(n):
+                if self.alphabet is None:
+                    out.append(chr(rng.randint(32, 126)))
+                elif isinstance(self.alphabet, Strategy):
+                    out.append(self.alphabet.example(rng, 2))
+                else:
+                    out.append(rng.choice(list(self.alphabet)))
+            return "".join(out)
+
+    class Lists(Strategy):
+        def __init__(self, elements, min_size=0, max_size=None):
+            self.elements = elements
+            self.min_size = int(min_size)
+            self.max_size = int(max_size) if max_size is not None else self.min_size + 20
+
+        def example(self, rng, i):
+            n = rng.randint(self.min_size, self.max_size)
+            return [self.elements.example(rng, 2) for _ in range(n)]
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = lambda min_value=0, max_value=2**31 - 1: Integers(
+        min_value, max_value
+    )
+    strategies.floats = lambda min_value=0.0, max_value=1.0: Floats(
+        min_value, max_value
+    )
+    strategies.sampled_from = SampledFrom
+    strategies.characters = Characters
+    strategies.text = Text
+    strategies.lists = Lists
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    def given(*args, **strategy_kwargs):
+        if args:
+            raise TypeError("hypothesis shim supports keyword strategies only")
+
+        def decorate(fn):
+            sig = inspect.signature(fn)
+            passthrough = [
+                p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs
+            ]
+
+            def wrapper(*wargs, **wkwargs):
+                n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+                # crc32, not hash(): str hashes are salted per process and
+                # would make drawn examples unreproducible across runs
+                rng = random.Random(
+                    0xC0FFEE ^ zlib.crc32(fn.__qualname__.encode())
+                )
+                for i in range(n):
+                    drawn = {
+                        k: s.example(rng, i) for k, s in strategy_kwargs.items()
+                    }
+                    fn(*wargs, **wkwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # hide strategy params from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(parameters=passthrough)
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def decorate(fn):
+            fn._shim_max_examples = int(max_examples)
+            return fn
+
+        return decorate
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strategies
+    hyp.__shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_shim()

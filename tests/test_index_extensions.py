@@ -69,9 +69,21 @@ def test_binary_sidecar_lookup_matches_dict(corpus, tmp_path):
     store, _ = corpus
     idx = build_index(store)
     path = tmp_path / "ix.npz"
-    idx.save_binary(path)
+    written, size = idx.save_binary(path)
+    assert written == path and written.exists()
+    assert size == written.stat().st_size
     bx = BinaryIndex(path)
     assert len(bx) == len(idx)
     for key in list(idx.entries.keys())[::37]:
         assert bx.lookup(key) == idx.lookup(key)
     assert bx.lookup("InChI=1S/NOT_A_REAL_ID") is None
+
+
+def test_binary_sidecar_normalizes_suffix(corpus, tmp_path):
+    """save_binary reports the file actually written (suffix added up front)."""
+    store, _ = corpus
+    idx = build_index(store)
+    written, size = idx.save_binary(tmp_path / "ix")  # no .npz given
+    assert written.name == "ix.npz" and written.exists()
+    assert size == written.stat().st_size
+    assert len(BinaryIndex(tmp_path / "ix")) == len(idx)
