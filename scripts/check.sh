@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
-# One-entry-point build check: tier-1 test suite + a fast interpret-mode
+# One-entry-point build check: tier-1 test suite, a fast interpret-mode
 # smoke of the sorted_probe Pallas kernel (stage B runs through the Pallas
-# interpreter, so kernel regressions surface even on CPU-only machines).
+# interpreter, so kernel regressions surface even on CPU-only machines),
+# a sharded-store round trip (build → save_sharded → reopen → lookup_batch),
+# and a smoke-scale pass of the full benchmark harness so the bench modules
+# can't silently rot.
 #
 # Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
@@ -35,5 +38,43 @@ assert bool(jnp.all(jnp.where(found_k, pos_k, 0) == jnp.where(found_r, pos_r, 0)
 assert int(found_k[:64].sum()) == 64, "planted hits not all found"
 print(f"sorted_probe interpret OK: {int(found_k.sum())}/{len(queries)} hits")
 PY
+
+echo "== store smoke: build -> save_sharded -> reopen -> lookup_batch =="
+python - <<'PY'
+import tempfile
+from pathlib import Path
+from repro.core import ByteOffsetIndex, IndexStore
+
+idx = ByteOffsetIndex(key_mode="full_id")
+for i in range(2000):
+    idx.add(f"InChI=1S/check/{i}", f"f_{i % 5:02d}.sdf", i * 64)
+with tempfile.TemporaryDirectory() as td:
+    summary = idx.save_sharded(Path(td) / "store", n_shards=4)
+    assert summary["written"] == 4, summary
+    qs = IndexStore.open(Path(td) / "store")
+    present = [f"InChI=1S/check/{i}" for i in range(0, 2000, 13)]
+    absent = [f"InChI=1S/nope/{i}" for i in range(50)]
+    fid, off, hit = qs.lookup_batch(present + absent)
+    assert hit[: len(present)].all() and not hit[len(present):].any()
+    for k, loc in zip(present, qs.locate_batch(present)):
+        assert loc == idx.lookup(k), (k, loc)
+    # re-publish is incremental: nothing changed -> nothing rewritten
+    assert idx.save_sharded(Path(td) / "store", n_shards=4)["written"] == 0
+print(f"index store OK: {len(present)} hits, {len(absent)} misses, "
+      f"{qs.stats.bloom_rejects} bloom rejects")
+PY
+
+echo "== bench smoke: full harness at smoke scale =="
+BENCH_OUT=$(mktemp)
+if ! REPRO_BENCH_FILES=2 REPRO_BENCH_RPF=250 \
+     REPRO_BENCH_CACHE="${TMPDIR:-/tmp}/repro_bench_smoke" \
+     python -m benchmarks.run > "$BENCH_OUT"; then
+  echo "benchmark harness failed:"
+  grep '\.ERROR,' "$BENCH_OUT" || tail -5 "$BENCH_OUT"
+  rm -f "$BENCH_OUT"
+  exit 1
+fi
+echo "bench harness OK: $(wc -l < "$BENCH_OUT") CSV rows"
+rm -f "$BENCH_OUT"
 
 echo "== all checks passed =="

@@ -9,6 +9,8 @@ Multi-source intersection (Eq. 1)          → :mod:`repro.core.intersect`
 Record substrate (SDF dialect)             → :mod:`repro.core.records`
 Synthetic corpus (scale model of PubChem)  → :mod:`repro.core.sdfgen`
 TPU packing layer (ids → uint32 lanes)     → :mod:`repro.core.packing`
+Sharded query service (mmap + Bloom)       → :mod:`repro.core.store`
+Bloom-filter prefilter sidecars            → :mod:`repro.core.bloom`
 """
 
 from .baseline import BaselineResult, estimate_runtime, measure_scan_throughput, naive_scan
@@ -37,8 +39,17 @@ from .index import (
     file_fingerprints,
     update_index,
 )
+from .bloom import BloomFilter
 from .intersect import IntersectionResult, intersect_host, intersect_sorted
 from .packing import lanes_for, pack_ids, unpack_ids
+from .store import (
+    IndexStore,
+    QueryStats,
+    candidate_runs,
+    digest_u64,
+    save_sharded,
+    shard_of,
+)
 from .records import (
     RECORD_DELIM,
     RecordStore,

@@ -25,7 +25,6 @@ from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .identifiers import canonical_id_from_structure, hashed_key
-from .index import ByteOffsetIndex
 from .records import RecordStore, extract_property, read_record_at
 from .sdfgen import PROP_ID
 
@@ -59,15 +58,21 @@ class ExtractionResult:
 
 
 def plan_extraction(
-    index: ByteOffsetIndex,
+    index,
     targets: Sequence[str],
     key_bits: int = 64,
     sort_offsets: bool = True,
 ) -> Tuple[Dict[str, List[Tuple[str, str, int]]], List[str]]:
-    """Build the per-file extraction plan.
+    """Build the per-file extraction plan through ONE batched lookup.
 
     Returns ``(plan, missing)`` where ``plan[file] = [(full_id, lookup_key,
     offset), ...]`` sorted by ascending offset (if ``sort_offsets``).
+
+    ``index`` is any read backend exposing the batch contract —
+    :class:`ByteOffsetIndex` (dict), :class:`BinaryIndex` (packed sidecar),
+    or :class:`repro.core.store.IndexStore` (sharded mmap store, where the
+    single ``locate_batch`` call amortizes digesting, Bloom filtering, and
+    shard probing over the whole target list).
 
     Targets are always full canonical ids (the ChEMBL∩eMolecules list is
     known by full id); under ``hashed_key`` indexing the lookup key is the
@@ -76,10 +81,16 @@ def plan_extraction(
     """
     plan: Dict[str, List[Tuple[str, str, int]]] = {}
     missing: List[str] = []
-    hashed = index.key_mode == "hashed_key"
-    for full_id in targets:
-        key = hashed_key(full_id, key_bits) if hashed else full_id
-        loc = index.lookup(key)
+    hashed = getattr(index, "key_mode", "full_id") == "hashed_key"
+    keys = [
+        hashed_key(t, key_bits) if hashed else t for t in targets
+    ]
+    locate = getattr(index, "locate_batch", None)
+    if locate is not None:
+        locs = locate(keys)
+    else:  # minimal backends: fall back to per-key lookups
+        locs = [index.lookup(k) for k in keys]
+    for full_id, key, loc in zip(targets, keys, locs):
         if loc is None:
             missing.append(full_id)
             continue
@@ -93,7 +104,7 @@ def plan_extraction(
 
 def extract(
     store: RecordStore,
-    index: ByteOffsetIndex,
+    index,  # ByteOffsetIndex | BinaryIndex | IndexStore (batch read contract)
     targets: Sequence[str],
     verify: bool = True,
     sort_offsets: bool = True,

@@ -97,6 +97,21 @@ class ByteOffsetIndex:
     def lookup(self, key: str) -> Optional[Tuple[str, int]]:
         return self.entries.get(key)
 
+    def locate_batch(
+        self, keys: Sequence[str]
+    ) -> List[Optional[Tuple[str, int]]]:
+        """Batched lookup — the read contract shared with ``IndexStore``.
+
+        Consumers (extraction planning, the data pipeline) call this once
+        per batch instead of ``lookup`` per key, so swapping the dict for
+        the sharded mmap store changes nothing above the call site.
+        """
+        return [self.entries.get(k) for k in keys]
+
+    def iter_keys(self) -> Iterable[str]:
+        """Key enumeration shared by every index backend."""
+        return iter(self.entries.keys())
+
     def __len__(self) -> int:
         return len(self.entries)
 
@@ -195,8 +210,33 @@ class ByteOffsetIndex:
             offsets=np.array(offs, dtype=np.int64)[order],
             file_names=np.array(file_names),
             keys=np.array(keys, dtype=object)[order].astype(str),
+            key_mode=np.array(self.key_mode),
         )
         return path, path.stat().st_size
+
+    def save_sharded(
+        self,
+        root: Path,
+        n_shards: int = 16,
+        digest_bits: int = 64,
+        bloom_bits_per_key: int = 12,
+    ) -> Dict[str, object]:
+        """Publish the index as a sharded mmap-backed store directory.
+
+        The serving-grade persistence path (:mod:`repro.core.store`):
+        digest-range shards of the packed sidecar columns plus per-shard
+        Bloom bitmaps.  Re-publishing after an incremental
+        :func:`update_index` rewrites only shards whose content changed.
+        """
+        from .store import save_sharded  # local import: store builds on index
+
+        return save_sharded(
+            self,
+            root,
+            n_shards=n_shards,
+            digest_bits=digest_bits,
+            bloom_bits_per_key=bloom_bits_per_key,
+        )
 
 
 class BinaryIndex:
@@ -218,6 +258,10 @@ class BinaryIndex:
         self.offsets = z["offsets"]
         self.file_names = [str(x) for x in z["file_names"]]
         self.keys = [str(x) for x in z["keys"]]
+        # persisted since PR 2; older sidecars predate hashed_key support
+        self.key_mode = (
+            str(z["key_mode"]) if "key_mode" in z.files else "full_id"
+        )
 
     def __len__(self) -> int:
         return len(self.digests)
@@ -234,6 +278,15 @@ class BinaryIndex:
                 return self.file_names[self.file_ids[i]], int(self.offsets[i])
             i += 1
         return None
+
+    def locate_batch(
+        self, keys: Sequence[str]
+    ) -> List[Optional[Tuple[str, int]]]:
+        """Batched lookup (same read contract as the dict index / IndexStore)."""
+        return [self.lookup(k) for k in keys]
+
+    def iter_keys(self) -> Iterable[str]:
+        return iter(self.keys)
 
 
 def scan_file_for_index(

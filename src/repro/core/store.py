@@ -1,0 +1,546 @@
+"""Sharded, mmap-backed query service over the byte-offset index.
+
+The dict inside :class:`~repro.core.index.ByteOffsetIndex` is the paper's
+§IV.A in-memory index — fine for one host building the index, a non-starter
+for serving it at the paper's 176M-compound scale.  This module is the
+serving-grade face of the same contract: the index partitioned by digest
+range into ``S`` shards, each persisted as packed sorted-digest columns
+(the :meth:`ByteOffsetIndex.save_binary` sidecar format, split per column
+so every column is ``np.load(..., mmap_mode="r")``-able) plus a Bloom
+bitmap, under one JSON manifest:
+
+    store_dir/
+      manifest.json              # params, file_names, per-shard meta
+      shard_0003.digests.npy     # uint64, sorted ascending within shard
+      shard_0003.file_ids.npy    # int32 into manifest["file_names"]
+      shard_0003.offsets.npy     # int64 byte offsets
+      shard_0003.keys.npy        # |S<w> full keys (the verify column)
+      shard_0003.bloom.npy       # packed Bloom bitmap (uint8)
+
+Query model (batch-first — ``lookup_batch(keys)``):
+
+1. **digest** every key once (vectorized blake2b-64, ``digest_u64``);
+2. **route** by digest range (``shard_of``: top bits of the digest);
+3. **Bloom prefilter** per shard — misses are rejected from a few bit
+   probes without ever faulting the shard's data columns in;
+4. **probe** survivors against the shard's sorted digest column — host
+   ``np.searchsorted`` or the ``sorted_probe`` Pallas kernel on device;
+5. **verify** every digest hit against the full key, scanning forward over
+   the equal-digest run (Algorithm 3 discipline: a digest collision costs
+   an extra compare, never a wrong record).
+
+Shards load lazily and stay mmap'd, so resident memory is O(touched
+shards), and an untouched store costs only its manifest.  ``ByteOffsetIndex``
+remains the builder: :func:`save_sharded` skips rewriting shards whose
+content hash is unchanged, so incremental index updates republish only the
+shards they touched.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .bloom import BloomFilter
+
+__all__ = [
+    "IndexStore",
+    "QueryStats",
+    "candidate_runs",
+    "digest_u64",
+    "save_sharded",
+    "shard_of",
+]
+
+MANIFEST_NAME = "manifest.json"
+FORMAT_VERSION = 1
+
+_COLUMNS = ("digests", "file_ids", "offsets", "keys")
+
+
+# ---------------------------------------------------------------------------
+# Shared digest / probe helpers (also used by core.intersect)
+# ---------------------------------------------------------------------------
+
+def digest_u64(ids: Sequence[str], bits: int = 64) -> np.ndarray:
+    """blake2b-64 digests of string ids as a uint64 vector.
+
+    ``bits < 64`` truncates to the low ``bits`` bits — the same
+    width-narrowing device :func:`repro.core.identifiers.hashed_key` uses to
+    make hundred-million-scale collision phenomenology observable (and
+    testable) at container-scale corpora.
+    """
+    if not 1 <= bits <= 64:
+        raise ValueError(f"bits must be in [1, 64], got {bits}")
+    out = np.fromiter(
+        (
+            int.from_bytes(hashlib.blake2b(s.encode(), digest_size=8).digest(), "big")
+            for s in ids
+        ),
+        dtype=np.uint64,
+        count=len(ids),
+    )
+    if bits < 64:
+        out &= np.uint64((1 << bits) - 1)
+    return out
+
+
+def candidate_runs(
+    sorted_digests: np.ndarray, query_digests: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-query ``[start, stop)`` bounds of the equal-digest run.
+
+    ``side="left"`` alone only reaches the *first* of several equal digests;
+    pairing it with ``side="right"`` exposes the whole run so callers can
+    verify every colliding candidate — the discipline
+    :meth:`BinaryIndex.lookup` applies per key, vectorized.
+    """
+    starts = np.searchsorted(sorted_digests, query_digests, side="left")
+    stops = np.searchsorted(sorted_digests, query_digests, side="right")
+    return starts.astype(np.int64), stops.astype(np.int64)
+
+
+def shard_of(digests: np.ndarray, n_shards: int, digest_bits: int = 64) -> np.ndarray:
+    """Shard id per digest: the top ``log2(n_shards)`` bits of the digest.
+
+    Digest-range partitioning keeps each shard's digest column sorted and
+    contiguous in key space, so per-shard binary search stays valid and
+    range ownership is a shift, not a table.
+    """
+    shard_bits = (n_shards - 1).bit_length()
+    if n_shards < 1 or n_shards != 1 << shard_bits and n_shards != 1:
+        raise ValueError(f"n_shards must be a power of two, got {n_shards}")
+    if n_shards == 1:
+        return np.zeros(len(digests), dtype=np.int64)
+    if shard_bits > digest_bits:
+        raise ValueError(
+            f"n_shards={n_shards} needs {shard_bits} bits but digests have "
+            f"only {digest_bits}"
+        )
+    return (digests >> np.uint64(digest_bits - shard_bits)).astype(np.int64)
+
+
+def _u64_to_pairs(d: np.ndarray) -> np.ndarray:
+    """uint64 → (N, 2) uint32 ``(hi, lo)`` pairs (lex order == u64 order)."""
+    hi = (d >> np.uint64(32)).astype(np.uint32)
+    lo = (d & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return np.stack([hi, lo], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Persistence: ByteOffsetIndex -> sharded store directory
+# ---------------------------------------------------------------------------
+
+def _shard_stem(s: int) -> str:
+    return f"shard_{s:04d}"
+
+
+def _atomic_save(path: Path, arr: np.ndarray) -> None:
+    """np.save via temp file + rename: a live reader mmap-ing ``path`` keeps
+    its old inode intact instead of seeing a truncated/torn rewrite."""
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        np.save(f, arr)
+    os.replace(tmp, path)
+
+
+def save_sharded(
+    index,
+    root: Path,
+    n_shards: int = 16,
+    digest_bits: int = 64,
+    bloom_bits_per_key: int = 12,
+) -> Dict[str, object]:
+    """Partition ``index.entries`` into digest-range shards under ``root``.
+
+    Each shard gets sorted-digest data columns, a Bloom sidecar, and a
+    content hash in the manifest.  When ``root`` already holds a store built
+    with the same parameters, shards whose content hash is unchanged are
+    *not* rewritten — an incremental :func:`repro.core.index.update_index`
+    followed by ``save_sharded`` republishes only the shards it touched.
+
+    Only primary entries are written (shadowed duplicate-key locations stay
+    in the CSV truth, exactly like ``save_binary``).  Returns a summary:
+    ``{"written", "skipped", "n_entries", "path"}``.
+    """
+    if n_shards < 1 or (n_shards & (n_shards - 1)):
+        raise ValueError(f"n_shards must be a power of two, got {n_shards}")
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+
+    keys: List[str] = list(index.entries.keys())
+    locs = [index.entries[k] for k in keys]
+    file_names = sorted({f for f, _ in locs})
+    file_id_of = {n: i for i, n in enumerate(file_names)}
+
+    digests = digest_u64(keys, bits=digest_bits)
+    sid = shard_of(digests, n_shards, digest_bits)
+
+    # previous manifest (same params) enables the skip-unchanged fast path
+    old_shards: Optional[List[dict]] = None
+    mpath = root / MANIFEST_NAME
+    if mpath.exists():
+        try:
+            old = json.loads(mpath.read_text())
+        except (OSError, json.JSONDecodeError):
+            old = None
+        if (
+            old
+            and old.get("version") == FORMAT_VERSION
+            and old.get("n_shards") == n_shards
+            and old.get("digest_bits") == digest_bits
+            # the shard content hash covers only the data columns, so the
+            # Bloom sizing must match too or a skipped shard would keep its
+            # old bitmap under a new manifest bloom_k (false negatives)
+            and old.get("bloom_bits_per_key") == bloom_bits_per_key
+            and old.get("file_names") == file_names
+            and len(old.get("shards", ())) == n_shards
+        ):
+            old_shards = old["shards"]
+
+    shards_meta: List[dict] = []
+    written = skipped = 0
+    for s in range(n_shards):
+        members = np.nonzero(sid == s)[0]
+        d = digests[members]
+        order = np.argsort(d, kind="stable")
+        members = members[order]
+        d = d[order]
+        fid = np.array([file_id_of[locs[i][0]] for i in members], dtype=np.int32)
+        off = np.array([locs[i][1] for i in members], dtype=np.int64)
+        if len(members):
+            kb = np.array([keys[i].encode() for i in members], dtype=np.bytes_)
+        else:
+            kb = np.array([], dtype="S1")
+
+        h = hashlib.blake2b(digest_size=16)
+        for col in (d, fid, off, kb):
+            h.update(col.tobytes())
+        content = h.hexdigest()
+        # bloom_k is deterministic in (count, bits_per_key): record it
+        # without building a bitmap so skipped shards cost nothing
+        _, bloom_k = BloomFilter.plan(len(d), bloom_bits_per_key)
+        meta = {"count": int(len(d)), "hash": content, "bloom_k": bloom_k}
+
+        stem = _shard_stem(s)
+        paths = {c: root / f"{stem}.{c}.npy" for c in _COLUMNS}
+        bloom_path = root / f"{stem}.bloom.npy"
+        unchanged = (
+            old_shards is not None
+            and old_shards[s].get("hash") == content
+            and all(p.exists() for p in paths.values())
+            and bloom_path.exists()
+        )
+        if unchanged:
+            skipped += 1
+        else:
+            _atomic_save(paths["digests"], d)
+            _atomic_save(paths["file_ids"], fid)
+            _atomic_save(paths["offsets"], off)
+            _atomic_save(paths["keys"], kb)
+            _atomic_save(
+                bloom_path,
+                BloomFilter.build(d, bits_per_key=bloom_bits_per_key).bits,
+            )
+            written += 1
+        shards_meta.append(meta)
+
+    manifest = {
+        "version": FORMAT_VERSION,
+        "key_mode": getattr(index, "key_mode", "full_id"),
+        "n_shards": n_shards,
+        "digest_bits": digest_bits,
+        "bloom_bits_per_key": bloom_bits_per_key,
+        "n_entries": len(keys),
+        "file_names": file_names,
+        "shards": shards_meta,
+    }
+    tmp = mpath.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(manifest, indent=1))
+    os.replace(tmp, mpath)  # atomic publish
+    # drop shard files a previous layout left behind (republish with fewer
+    # shards, crashed temp files) — unreachable through the new manifest
+    # but they would inflate the on-disk footprint forever
+    expected = {
+        f"{_shard_stem(s)}.{c}.npy"
+        for s in range(n_shards)
+        for c in (*_COLUMNS, "bloom")
+    }
+    for p in root.glob("shard_*"):
+        if p.name not in expected:
+            p.unlink()
+    return {
+        "written": written,
+        "skipped": skipped,
+        "n_entries": len(keys),
+        "path": str(root),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The query service
+# ---------------------------------------------------------------------------
+
+@dataclass
+class QueryStats:
+    """Cumulative counters across ``lookup_batch`` calls."""
+
+    queries: int = 0
+    hits: int = 0
+    bloom_rejects: int = 0          # dropped before touching any data column
+    bloom_false_positives: int = 0  # passed the filter, no digest in shard
+    digest_probes: int = 0          # candidates probed against a digest column
+    verify_collisions: int = 0      # equal digest, different key (scanned past)
+    shards_touched: Set[int] = field(default_factory=set)
+
+
+class _Shard:
+    __slots__ = ("digests", "file_ids", "offsets", "keys")
+
+    def __init__(self, digests, file_ids, offsets, keys):
+        self.digests = digests
+        self.file_ids = file_ids
+        self.offsets = offsets
+        self.keys = keys
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            int(a.nbytes) for a in (self.digests, self.file_ids, self.offsets, self.keys)
+        )
+
+
+class IndexStore:
+    """mmap-backed sharded index with Bloom prefilter and batched lookups.
+
+    Drop-in for the read side of :class:`ByteOffsetIndex` (``lookup`` /
+    ``locate_batch`` / ``key_mode`` / ``__contains__``), so
+    :func:`repro.core.extract.extract` and the training data pipeline run
+    unchanged on top of it — but the core API is :meth:`lookup_batch`, which
+    amortizes digesting, routing, filtering, and probing across the whole
+    batch.
+    """
+
+    def __init__(self, root: Path, manifest: dict, mmap: bool = True):
+        self.root = Path(root)
+        self.manifest = manifest
+        self.key_mode: str = manifest["key_mode"]
+        self.n_shards: int = int(manifest["n_shards"])
+        self.digest_bits: int = int(manifest["digest_bits"])
+        self.file_names: List[str] = list(manifest["file_names"])
+        self._mmap = bool(mmap)
+        self._shards: Dict[int, _Shard] = {}
+        self._blooms: Dict[int, BloomFilter] = {}
+        self.stats = QueryStats()
+
+    @classmethod
+    def open(cls, root: Path, mmap: bool = True) -> "IndexStore":
+        root = Path(root)
+        manifest = json.loads((root / MANIFEST_NAME).read_text())
+        if manifest.get("version") != FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported store version {manifest.get('version')!r} "
+                f"(expected {FORMAT_VERSION})"
+            )
+        return cls(root, manifest, mmap=mmap)
+
+    # -- lazy shard access ---------------------------------------------------
+
+    def _load_column(self, stem: str, col: str, count: int) -> np.ndarray:
+        path = self.root / f"{stem}.{col}.npy"
+        if count == 0:
+            # np.memmap refuses zero-length maps; synthesize the empty column
+            empty_dtype = {"digests": np.uint64, "file_ids": np.int32,
+                           "offsets": np.int64, "keys": "S1"}[col]
+            return np.array([], dtype=empty_dtype)
+        return np.load(path, mmap_mode="r" if self._mmap else None)
+
+    def _shard(self, s: int) -> _Shard:
+        shard = self._shards.get(s)
+        if shard is None:
+            stem = _shard_stem(s)
+            count = int(self.manifest["shards"][s]["count"])
+            shard = _Shard(*(self._load_column(stem, c, count) for c in _COLUMNS))
+            self._shards[s] = shard
+        return shard
+
+    def _bloom(self, s: int) -> BloomFilter:
+        bloom = self._blooms.get(s)
+        if bloom is None:
+            bits = np.load(self.root / f"{_shard_stem(s)}.bloom.npy")
+            bloom = BloomFilter(np.asarray(bits, dtype=np.uint8),
+                                int(self.manifest["shards"][s]["bloom_k"]))
+            self._blooms[s] = bloom
+        return bloom
+
+    # -- core batched query --------------------------------------------------
+
+    def lookup_batch(
+        self, keys: Sequence[str], probe: Optional[str] = None
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Resolve a batch of keys: ``(file_ids, offsets, hit_mask)``.
+
+        ``file_ids`` (int32) index :attr:`file_names`; misses hold ``-1`` in
+        both columns and ``False`` in ``hit_mask``.  ``probe`` selects the
+        digest-search backend: ``"host"`` (``np.searchsorted``), ``"device"``
+        (the ``sorted_probe`` Pallas kernel — jnp reference off-TPU), or
+        ``None``/"auto" (device only when JAX is already running on TPU).
+        """
+        n = len(keys)
+        file_ids = np.full(n, -1, dtype=np.int32)
+        offsets = np.full(n, -1, dtype=np.int64)
+        hit = np.zeros(n, dtype=bool)
+        if n == 0:
+            return file_ids, offsets, hit
+        if probe is None or probe == "auto":
+            probe = "device" if _tpu_backend_active() else "host"
+        if probe not in ("host", "device"):
+            raise ValueError(f"unknown probe backend {probe!r}")
+
+        q = digest_u64(keys, bits=self.digest_bits)
+        sid = shard_of(q, self.n_shards, self.digest_bits)
+        self.stats.queries += n
+
+        for s in np.unique(sid):
+            s = int(s)
+            sel = np.nonzero(sid == s)[0]
+            passed = self._bloom(s).contains(q[sel])
+            self.stats.bloom_rejects += int(len(sel) - passed.sum())
+            sel = sel[passed]
+            if not len(sel):
+                continue
+            shard = self._shard(s)
+            self.stats.shards_touched.add(s)
+            qd = q[sel]
+            td = shard.digests
+            self.stats.digest_probes += int(len(sel))
+            if probe == "device":
+                found, starts = _probe_starts_device(td, qd)
+            else:
+                starts = np.searchsorted(td, qd, side="left")
+                inb = starts < len(td)
+                found = np.zeros(len(qd), dtype=bool)
+                found[inb] = td[starts[inb]] == qd[inb]
+            self.stats.bloom_false_positives += int((~found).sum())
+            for j in np.nonzero(found)[0]:
+                row = int(sel[j])
+                kb = keys[row].encode()
+                t = int(starts[j])
+                while t < len(td) and td[t] == qd[j]:
+                    if shard.keys[t] == kb:
+                        file_ids[row] = shard.file_ids[t]
+                        offsets[row] = shard.offsets[t]
+                        hit[row] = True
+                        break
+                    self.stats.verify_collisions += 1  # digest collision
+                    t += 1
+
+        self.stats.hits += int(hit.sum())
+        return file_ids, offsets, hit
+
+    # -- ByteOffsetIndex-compatible read surface -------------------------------
+
+    def locate_batch(
+        self, keys: Sequence[str], probe: Optional[str] = None
+    ) -> List[Optional[Tuple[str, int]]]:
+        """String-level convenience over :meth:`lookup_batch`."""
+        fid, off, hit = self.lookup_batch(keys, probe=probe)
+        return [
+            (self.file_names[fid[i]], int(off[i])) if hit[i] else None
+            for i in range(len(keys))
+        ]
+
+    def lookup(self, key: str) -> Optional[Tuple[str, int]]:
+        return self.locate_batch([key])[0]
+
+    def __contains__(self, key: str) -> bool:
+        return self.lookup_batch([key])[2][0]
+
+    def __len__(self) -> int:
+        return int(self.manifest["n_entries"])
+
+    def iter_keys(self) -> Iterator[str]:
+        """All keys, shard by shard (loads every shard — builder-side use)."""
+        for s in range(self.n_shards):
+            for kb in self._shard(s).keys:
+                yield kb.decode()
+
+    # -- capacity accounting (benchmarks) -------------------------------------
+
+    @property
+    def shards_loaded(self) -> int:
+        return len(self._shards)
+
+    def total_bytes(self) -> int:
+        """Persistent footprint: every store file on disk."""
+        return sum(
+            p.stat().st_size
+            for p in self.root.iterdir()
+            if p.name == MANIFEST_NAME or p.name.startswith("shard_")
+        )
+
+    def resident_bytes(self) -> int:
+        """Bytes of shard columns + Bloom bitmaps actually faulted in.
+
+        With mmap this is an upper bound (pages of touched shards); the
+        point of comparison is against the dict index, which is *all*
+        resident *always*.
+        """
+        return sum(sh.nbytes for sh in self._shards.values()) + sum(
+            bf.nbytes for bf in self._blooms.values()
+        )
+
+
+def _tpu_backend_active() -> bool:
+    """True only when JAX is ALREADY imported and its backend is TPU.
+
+    Deliberately never imports jax: a host-side lookup must not pay a
+    multi-second framework import just to learn there is no accelerator.
+    """
+    import sys
+
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return False
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - defensive
+        return False
+
+
+def _probe_starts_device(
+    table_digests: np.ndarray, query_digests: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Device digest probe: ``sorted_probe`` over (hi, lo) uint32 pairs.
+
+    Returns ``(found, starts)`` with ``starts`` the leftmost equal-digest
+    position — identical contract to the host ``searchsorted`` path, so the
+    equal-run verify loop above is backend-agnostic.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.sorted_probe.ops import sorted_probe
+
+    td = np.ascontiguousarray(table_digests)
+    found, pos = sorted_probe(
+        jnp.asarray(_u64_to_pairs(query_digests)),
+        jnp.asarray(_u64_to_pairs(td)),
+    )
+    found = np.asarray(found, dtype=bool)
+    starts = np.asarray(pos, dtype=np.int64)
+    # The Pallas kernel's fence partitioning assumes a unique table; shard
+    # digest columns carry collision runs, and a run straddling a table
+    # block gives a within-block (not global-leftmost) position.  Rewind to
+    # the run head so the forward verify scan sees every candidate.
+    for j in np.nonzero(found)[0]:
+        t = int(starts[j])
+        while t > 0 and td[t - 1] == query_digests[j]:
+            t -= 1
+        starts[j] = t
+    return found, starts

@@ -32,7 +32,6 @@ import numpy as np
 
 from repro.core.extract import plan_extraction
 from repro.core.identifiers import canonical_id_from_structure
-from repro.core.index import ByteOffsetIndex
 from repro.core.records import RecordStore, read_record_at
 from repro.data.sampler import GlobalSampler
 from repro.data.tokenizer import ByteTokenizer, render_example
@@ -54,7 +53,7 @@ class IndexedDataset:
     def __init__(
         self,
         store: RecordStore,
-        index: ByteOffsetIndex,
+        index,  # ByteOffsetIndex | IndexStore (batch read contract)
         seq_len: int,
         verify: bool = True,
     ):
@@ -63,8 +62,9 @@ class IndexedDataset:
         self.seq_len = seq_len
         self.verify = verify
         self.tok = ByteTokenizer()
-        # dataset order = sorted index keys (deterministic across hosts)
-        self.keys: List[str] = sorted(index.entries.keys())
+        # dataset order = sorted index keys (deterministic across hosts;
+        # iter_keys is the enumeration every index backend shares)
+        self.keys: List[str] = sorted(index.iter_keys())
         self.stats = StragglerStats()
 
     def __len__(self) -> int:
@@ -78,7 +78,13 @@ class IndexedDataset:
         return read_record_at(self.store.path_of(fname), off)
 
     def fetch_many(self, keys: List[str]) -> Dict[str, str]:
-        """Grouped + offset-sorted fetch (Algorithm 3 access pattern)."""
+        """Grouped + offset-sorted fetch (Algorithm 3 access pattern).
+
+        Planning goes through ONE batched index lookup (``plan_extraction``
+        → ``locate_batch``), so a step's whole fetch set is digested,
+        Bloom-filtered, and probed together when the index is a sharded
+        ``IndexStore``.
+        """
         plan, missing = plan_extraction(self.index, keys)
         if missing:
             raise KeyError(f"{len(missing)} keys missing from index")

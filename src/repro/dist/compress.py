@@ -41,22 +41,37 @@ PyTree = Any
 _MIN_SCALE = 1e-12
 
 
-def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric per-leaf int8 quantization.
+def quantize_int8(
+    x: jax.Array, per_channel: bool = False
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization, per-leaf or per-channel.
 
     Returns ``(q, scale)`` with ``q = round(x / scale)`` in [-127, 127]
-    and ``scale = max|x| / 127`` (an fp32 scalar), so the round-trip error
-    is bounded by ``scale / 2`` elementwise.
+    and ``scale = max|x| / 127``, so the round-trip error is bounded by
+    ``scale / 2`` elementwise.
+
+    ``per_channel=True`` computes one scale per axis-0 slice (shape
+    ``(d0, 1, ..., 1)`` — broadcastable) instead of a single fp32 scalar.
+    For wide-variance leaves — embedding tables, gate matrices where row
+    magnitudes span orders of magnitude — a per-tensor scale collapses
+    small-magnitude rows to zero; per-channel scales bound each row's
+    error by ITS OWN amax/254, at d0×4 bytes of extra wire cost.  Leaves
+    with fewer than 2 dims fall back to the per-tensor scale (a vector
+    leaf's "channels" are single elements — scales would outweigh data).
     """
     xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf))
+    if per_channel and xf.ndim >= 2:
+        amax = jnp.max(jnp.abs(xf), axis=tuple(range(1, xf.ndim)), keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(xf))
     scale = jnp.maximum(amax / 127.0, _MIN_SCALE)
     q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
     return q, scale
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
-    """Inverse of :func:`quantize_int8` (fp32 output)."""
+    """Inverse of :func:`quantize_int8` (fp32 output; scale broadcasts, so
+    scalar and per-channel scales dequantize identically)."""
     return q.astype(jnp.float32) * scale
 
 
@@ -86,11 +101,13 @@ class ErrorFeedbackCompressor:
         grads, state = compressor.apply(grads, state)
 
     ``method`` selects the lossy step: "int8" (default) or "topk"
-    (magnitude sparsification at :attr:`topk_frac`).
+    (magnitude sparsification at :attr:`topk_frac`); :attr:`per_channel`
+    switches int8 to axis-0 per-channel scales (wide-variance leaves).
     """
 
     method: str = "int8"
     topk_frac: float = 0.1
+    per_channel: bool = False
     state_key: str = "ef_residual"
 
     def __post_init__(self):
@@ -106,7 +123,7 @@ class ErrorFeedbackCompressor:
     def _compress_leaf(self, g: jax.Array) -> jax.Array:
         if self.method == "topk":
             return topk_mask(g, self.topk_frac)
-        q, s = quantize_int8(g)
+        q, s = quantize_int8(g, per_channel=self.per_channel)
         return dequantize_int8(q, s)
 
     def apply(
@@ -136,6 +153,7 @@ class ErrorFeedbackCompressor:
 # launcher accept, so adding a scheme here surfaces it everywhere at once.
 _COMPRESSORS: Dict[str, Dict[str, Any]] = {
     "int8_ef": {"method": "int8"},
+    "int8_pc_ef": {"method": "int8", "per_channel": True},
     "topk_ef": {"method": "topk"},
 }
 
@@ -143,7 +161,8 @@ _COMPRESSORS: Dict[str, Dict[str, Any]] = {
 def make_compressor(
     name: Optional[str], **overrides: Any
 ) -> Optional[ErrorFeedbackCompressor]:
-    """Build a compressor by name ("int8_ef", "topk_ef"); None/"none" → None."""
+    """Build a compressor by name ("int8_ef", "int8_pc_ef", "topk_ef");
+    None/"none" → None."""
     if name is None or name == "none":
         return None
     try:

@@ -36,7 +36,7 @@ def main():
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--compressor", default="int8_ef",
-                    choices=["int8_ef", "topk_ef"],
+                    choices=["int8_ef", "int8_pc_ef", "topk_ef"],
                     help="gradient compression scheme (with --compress-grads)")
     ap.add_argument("--topk-frac", type=float, default=0.1,
                     help="kept fraction for --compressor topk_ef")

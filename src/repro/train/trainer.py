@@ -43,7 +43,8 @@ class TrainerConfig:
     grad_accum: int = 1
     compress_grads: bool = False
     # compression scheme when compress_grads is set — a repro.dist.compress
-    # registry name ("int8_ef", "topk_ef"); topk_frac only applies to topk.
+    # registry name ("int8_ef", "int8_pc_ef", "topk_ef"); topk_frac only
+    # applies to topk.
     compressor: str = "int8_ef"
     topk_frac: float = 0.1
     seed: int = 0

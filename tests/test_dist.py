@@ -138,15 +138,51 @@ def test_int8_zero_leaf_is_stable():
     np.testing.assert_array_equal(np.asarray(back), 0.0)
 
 
+def test_int8_per_channel_beats_per_tensor_on_wide_variance():
+    """Axis-0 scales bound each row's error by its OWN amax: on a leaf whose
+    row magnitudes span 6 orders, per-tensor quantization flushes the small
+    rows to zero while per-channel round-trips them."""
+    rng = np.random.default_rng(11)
+    rows = [rng.normal(size=48).astype(np.float32) * 10.0 ** (p - 4)
+            for p in range(8)]
+    x = jnp.asarray(np.stack(rows))
+    q_pt, s_pt = quantize_int8(x)
+    q_pc, s_pc = quantize_int8(x, per_channel=True)
+    assert s_pc.shape == (8, 1)
+    back_pt = dequantize_int8(q_pt, s_pt)
+    back_pc = dequantize_int8(q_pc, s_pc)
+    # per-channel error respects each row's own bound...
+    row_err = jnp.max(jnp.abs(back_pc - x), axis=1)
+    assert bool(jnp.all(row_err <= s_pc[:, 0] * 0.5 + 1e-9))
+    # ...and is strictly better than per-tensor on the small rows
+    small = jnp.abs(x[0])
+    assert float(jnp.max(jnp.abs(back_pt[0] - x[0]))) >= float(jnp.max(small)) * 0.99
+    assert float(jnp.max(jnp.abs(back_pc[0] - x[0]))) < float(jnp.max(small)) * 0.01
+    assert float(jnp.sum(jnp.abs(back_pc - x))) < float(jnp.sum(jnp.abs(back_pt - x)))
+
+
+def test_int8_per_channel_falls_back_on_vectors():
+    x = jnp.asarray(np.linspace(-2, 2, 9, dtype=np.float32))
+    q, s = quantize_int8(x, per_channel=True)
+    assert s.ndim == 0  # per-tensor scalar scale for <2-dim leaves
+    np.testing.assert_allclose(
+        np.asarray(dequantize_int8(q, s)), np.asarray(x), atol=float(s) * 0.5 + 1e-6
+    )
+
+
 def test_topk_mask_keeps_largest():
     x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05], jnp.float32)
     out = np.asarray(topk_mask(x, 0.4))  # k = 2
     np.testing.assert_array_equal(out, [0.0, -5.0, 0.0, 3.0, 0.0])
 
 
-@pytest.mark.parametrize("method", ["int8", "topk"])
-def test_error_feedback_telescopes_to_true_gradient_sum(method):
-    comp = ErrorFeedbackCompressor(method=method, topk_frac=0.25)
+@pytest.mark.parametrize(
+    "method,per_channel", [("int8", False), ("int8", True), ("topk", False)]
+)
+def test_error_feedback_telescopes_to_true_gradient_sum(method, per_channel):
+    comp = ErrorFeedbackCompressor(
+        method=method, topk_frac=0.25, per_channel=per_channel
+    )
     params = {"a": jnp.zeros((17,), jnp.float32), "n": {"b": jnp.zeros((4, 3))}}
     state = {"ef_residual": comp.init(params)}
     rng = np.random.default_rng(3)
@@ -185,6 +221,9 @@ def test_make_compressor_registry():
     assert make_compressor(None) is None
     assert make_compressor("none") is None
     assert make_compressor("int8_ef").method == "int8"
+    pc = make_compressor("int8_pc_ef")
+    assert pc.method == "int8" and pc.per_channel
+    assert not make_compressor("int8_ef").per_channel
     tk = make_compressor("topk_ef", topk_frac=0.5)
     assert tk.method == "topk" and tk.topk_frac == 0.5
     with pytest.raises(ValueError):

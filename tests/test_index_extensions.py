@@ -10,7 +10,8 @@ import pytest
 
 from repro.core import RecordStore, build_index, extract
 from repro.core.index import BinaryIndex, file_fingerprints, update_index
-from repro.core.sdfgen import CorpusSpec, generate_corpus, record_text_for_cid
+from repro.core.records import extract_property, read_record_at
+from repro.core.sdfgen import PROP_ID, CorpusSpec, generate_corpus, record_text_for_cid
 
 
 @pytest.fixture()
@@ -77,6 +78,21 @@ def test_binary_sidecar_lookup_matches_dict(corpus, tmp_path):
     for key in list(idx.entries.keys())[::37]:
         assert bx.lookup(key) == idx.lookup(key)
     assert bx.lookup("InChI=1S/NOT_A_REAL_ID") is None
+
+
+def test_binary_sidecar_persists_key_mode(corpus, tmp_path):
+    """A hashed-key sidecar must extract like its builder: key_mode travels
+    with the file, so plan_extraction hashes the targets before lookup."""
+    store, _ = corpus
+    idx = build_index(store, key_mode="hashed_key")
+    written, _ = idx.save_binary(tmp_path / "hx.npz")
+    bx = BinaryIndex(written)
+    assert bx.key_mode == "hashed_key"
+    targets = [
+        extract_property(read_record_at(store.files()[0], 0), PROP_ID)
+    ]
+    res = extract(store, bx, targets)
+    assert res.found == 1 and not res.missing and not res.mismatches
 
 
 def test_binary_sidecar_normalizes_suffix(corpus, tmp_path):

@@ -1,0 +1,351 @@
+"""Sharded mmap-backed IndexStore + Bloom prefilter tests.
+
+Covers the query-service layer's contract: shard-boundary routing, the
+digest-collision verify path (narrow-digest seeding), mmap reopen after
+``save_sharded``, Bloom false-positive handling, incremental re-publish,
+device-probe parity, and ``lookup_batch`` parity with per-key
+``ByteOffsetIndex.lookup`` — including a ≥100k-key corpus with seeded
+digest collisions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BloomFilter,
+    ByteOffsetIndex,
+    IndexStore,
+    RecordStore,
+    build_index,
+    candidate_runs,
+    digest_u64,
+    extract,
+    intersect_host,
+    intersect_sorted,
+    save_sharded,
+    shard_of,
+)
+from repro.core.sdfgen import CorpusSpec, db_id_list, generate_corpus
+
+
+def synth_index(n: int, n_files: int = 7) -> ByteOffsetIndex:
+    idx = ByteOffsetIndex(key_mode="full_id")
+    for i in range(n):
+        idx.add(f"InChI=1S/synthetic/{i}", f"f_{i % n_files:02d}.sdf", i * 100)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# Bloom filter
+# ---------------------------------------------------------------------------
+
+def test_bloom_no_false_negatives_and_bounded_fpr():
+    rng = np.random.default_rng(0)
+    present = rng.integers(0, 2**63, size=4096, dtype=np.uint64)
+    absent = rng.integers(0, 2**63, size=4096, dtype=np.uint64)
+    absent = np.setdiff1d(absent, present)
+    bf = BloomFilter.build(present, bits_per_key=12)
+    assert bf.contains(present).all()  # never a false negative
+    fpr = bf.contains(absent).mean()
+    # 12 bits/key ≈ 0.5% theoretical; allow generous slack
+    assert fpr < 0.05, fpr
+    assert bf.expected_fpp(len(present)) < 0.02
+
+
+def test_bloom_empty_and_tiny():
+    bf = BloomFilter.build(np.array([], dtype=np.uint64))
+    assert bf.contains(np.array([1, 2, 3], dtype=np.uint64)).sum() == 0
+    one = np.array([42], dtype=np.uint64)
+    bf = BloomFilter.build(one)
+    assert bf.contains(one).all()
+
+
+# ---------------------------------------------------------------------------
+# save_sharded / IndexStore round trip
+# ---------------------------------------------------------------------------
+
+def test_save_sharded_reopen_parity_and_mmap(tmp_path):
+    idx = synth_index(3000)
+    summary = idx.save_sharded(tmp_path / "store", n_shards=8)
+    assert summary == {
+        "written": 8, "skipped": 0, "n_entries": 3000,
+        "path": str(tmp_path / "store"),
+    }
+    qs = IndexStore.open(tmp_path / "store")
+    assert len(qs) == 3000 and qs.key_mode == "full_id"
+
+    keys = [f"InChI=1S/synthetic/{i}" for i in range(0, 3000, 11)]
+    misses = [f"InChI=1S/absent/{i}" for i in range(40)]
+    fid, off, hit = qs.lookup_batch(keys + misses)
+    assert hit[: len(keys)].all() and not hit[len(keys):].any()
+    assert (fid[len(keys):] == -1).all() and (off[len(keys):] == -1).all()
+    for k, loc in zip(keys + misses, qs.locate_batch(keys + misses)):
+        assert loc == idx.lookup(k)
+    # columns of a touched shard are memory-mapped, not copied
+    touched = next(iter(qs.stats.shards_touched))
+    assert isinstance(qs._shard(touched).digests, np.memmap)
+    # single-key compatibility surface
+    assert qs.lookup(keys[0]) == idx.lookup(keys[0])
+    assert keys[0] in qs and misses[0] not in qs
+
+
+def test_shards_load_lazily(tmp_path):
+    idx = synth_index(2000)
+    idx.save_sharded(tmp_path / "s", n_shards=16)
+    qs = IndexStore.open(tmp_path / "s")
+    assert qs.shards_loaded == 0  # open() touches only the manifest
+    # find a key and query it: exactly one shard may fault in
+    key = "InChI=1S/synthetic/123"
+    assert qs.lookup(key) == idx.lookup(key)
+    assert qs.shards_loaded == 1
+    d = digest_u64([key], bits=qs.digest_bits)
+    assert set(qs.stats.shards_touched) == {
+        int(shard_of(d, qs.n_shards, qs.digest_bits)[0])
+    }
+    # a bloom-rejected miss loads no further shard columns
+    before = qs.shards_loaded
+    rejected = None
+    for i in range(200):
+        probe = f"InChI=1S/absent/{i}"
+        r0 = qs.stats.bloom_rejects
+        qs.lookup(probe)
+        if qs.stats.bloom_rejects > r0:
+            rejected = probe
+            break
+    assert rejected is not None
+    assert qs.shards_loaded == before
+
+
+def test_shard_boundary_keys(tmp_path):
+    """Keys whose digests sit at the edges of a shard's range route and
+    resolve correctly (an off-by-one in `shard_of` or the per-shard search
+    would lose exactly these)."""
+    digest_bits, n_shards = 12, 4
+    span = np.uint64(1 << (digest_bits - 2))  # digest range per shard
+    idx = ByteOffsetIndex(key_mode="full_id")
+    # hunt keys landing on the first/last digest value of a shard range
+    cand = [f"InChI=1S/boundary/{i}" for i in range(20_000)]
+    d = digest_u64(cand, bits=digest_bits)
+    rem = d % span
+    picks = np.nonzero((rem == 0) | (rem == span - np.uint64(1)))[0][:6]
+    assert len(picks) == 6, "boundary-key hunt came up short"
+    boundary_keys = [cand[int(i)] for i in picks]
+    for i in picks:
+        idx.add(cand[int(i)], "b.sdf", int(i))
+    for j in range(500):  # filler spread across shards
+        idx.add(f"InChI=1S/fill/{j}", "f.sdf", j)
+    idx.save_sharded(tmp_path / "s", n_shards=n_shards, digest_bits=digest_bits)
+    qs = IndexStore.open(tmp_path / "s")
+    assert qs.locate_batch(boundary_keys) == [idx.lookup(k) for k in boundary_keys]
+
+
+def test_digest_collision_verify_path(tmp_path):
+    """At 8 effective digest bits nearly every digest collides; the
+    equal-run scan + full-key verify must still resolve every key to ITS
+    location and reject absent keys that alias a present digest."""
+    idx = synth_index(600)
+    idx.save_sharded(tmp_path / "s", n_shards=4, digest_bits=8)
+    qs = IndexStore.open(tmp_path / "s")
+    keys = [f"InChI=1S/synthetic/{i}" for i in range(600)]
+    assert qs.locate_batch(keys) == [idx.lookup(k) for k in keys]
+    assert qs.stats.verify_collisions > 0  # the run scan actually ran
+    # absent keys: with 256 digest values every miss aliases some present
+    # digest — verification must turn them all into clean misses
+    absent = [f"InChI=1S/absent/{i}" for i in range(200)]
+    _, _, hit = qs.lookup_batch(absent)
+    assert not hit.any()
+
+
+def test_bloom_false_positive_handling(tmp_path):
+    """A 1-bit-per-key Bloom filter false-positives heavily; every false
+    positive must degrade to a probed miss, never a wrong record."""
+    idx = synth_index(2000)
+    save_sharded(idx, tmp_path / "s", n_shards=4, bloom_bits_per_key=1)
+    qs = IndexStore.open(tmp_path / "s")
+    absent = [f"InChI=1S/absent/{i}" for i in range(2000)]
+    _, _, hit = qs.lookup_batch(absent)
+    assert not hit.any()
+    assert qs.stats.bloom_false_positives > 0  # filter lied, probe caught it
+    assert qs.stats.bloom_rejects > 0          # and it still rejects some
+    # presents still all resolve (no false negatives by construction)
+    keys = [f"InChI=1S/synthetic/{i}" for i in range(0, 2000, 17)]
+    _, _, hit = qs.lookup_batch(keys)
+    assert hit.all()
+
+
+def test_incremental_save_rewrites_only_changed_shards(tmp_path):
+    idx = synth_index(4000)
+    root = tmp_path / "s"
+    assert idx.save_sharded(root, n_shards=8)["written"] == 8
+    # no change -> no rewrite
+    again = idx.save_sharded(root, n_shards=8)
+    assert again["written"] == 0 and again["skipped"] == 8
+    # one new key -> exactly the shard owning its digest is rewritten
+    new_key = "InChI=1S/synthetic/new"
+    idx.add(new_key, "f_00.sdf", 999_999)
+    third = idx.save_sharded(root, n_shards=8)
+    assert third["written"] == 1 and third["skipped"] == 7
+    qs = IndexStore.open(root)
+    assert len(qs) == 4001
+    assert qs.lookup(new_key) == ("f_00.sdf", 999_999)
+    # different params -> full rewrite (no stale-skip across layouts)
+    assert idx.save_sharded(root, n_shards=4)["written"] == 4
+    # ...and the old layout's extra shard files are cleaned up, so the
+    # reported storage footprint reflects the live layout only
+    leftover = {p.name for p in root.glob("shard_*.npy")
+                if not p.name.startswith(tuple(f"shard_000{s}" for s in range(4)))}
+    assert not leftover, leftover
+    # a Bloom-sizing change alone must also rewrite (the content hash only
+    # covers data columns; a skipped shard would pair the old bitmap with
+    # the new bloom_k -> false negatives)
+    resized = idx.save_sharded(root, n_shards=4, bloom_bits_per_key=4)
+    assert resized["written"] == 4 and resized["skipped"] == 0
+    qs2 = IndexStore.open(root)
+    keys = [f"InChI=1S/synthetic/{i}" for i in range(0, 4000, 97)]
+    assert qs2.lookup_batch(keys)[2].all()
+
+
+def test_republish_preserves_live_mmap_readers(tmp_path):
+    """Shard rewrites go through temp-file + rename, so a reader holding a
+    shard mmap'd keeps its old inode — never a torn/truncated column."""
+    idx = synth_index(1000)
+    root = tmp_path / "s"
+    idx.save_sharded(root, n_shards=2)
+    qs = IndexStore.open(root)
+    keys = [f"InChI=1S/synthetic/{i}" for i in range(0, 1000, 3)]
+    assert qs.lookup_batch(keys)[2].all()  # fault both shards in (mmap'd)
+    before = [np.asarray(qs._shard(s).digests).copy() for s in range(2)]
+    for i in range(200):
+        idx.add(f"InChI=1S/more/{i}", "g.sdf", i)
+    assert idx.save_sharded(root, n_shards=2)["written"] == 2
+    for s in range(2):  # the live mapping still sees the old bytes, intact
+        np.testing.assert_array_equal(np.asarray(qs._shard(s).digests), before[s])
+    assert qs.locate_batch(keys) == [idx.lookup(k) for k in keys]
+    # a fresh open serves the republished content
+    assert IndexStore.open(root).lookup("InChI=1S/more/7") == ("g.sdf", 7)
+
+
+def test_device_probe_parity(tmp_path):
+    idx = synth_index(1500)
+    idx.save_sharded(tmp_path / "s", n_shards=4)
+    keys = [f"InChI=1S/synthetic/{i}" for i in range(0, 1500, 7)]
+    keys += [f"InChI=1S/absent/{i}" for i in range(60)]
+    host = IndexStore.open(tmp_path / "s")
+    dev = IndexStore.open(tmp_path / "s")
+    fh, oh, hh = host.lookup_batch(keys, probe="host")
+    fd, od, hd = dev.lookup_batch(keys, probe="device")
+    np.testing.assert_array_equal(hh, hd)
+    np.testing.assert_array_equal(fh, fd)
+    np.testing.assert_array_equal(oh, od)
+    with pytest.raises(ValueError):
+        host.lookup_batch(keys[:1], probe="quantum")
+
+
+@settings(max_examples=15)
+@given(picks=st.lists(st.integers(min_value=0, max_value=2999), min_size=1,
+                      max_size=60))
+def test_lookup_batch_parity_hypothesis(tmp_path_factory, picks):
+    global _HYP_STORE
+    try:
+        idx, qs = _HYP_STORE
+    except NameError:
+        idx = synth_index(3000)
+        root = tmp_path_factory.mktemp("hyp") / "s"
+        idx.save_sharded(root, n_shards=8, digest_bits=20)
+        qs = IndexStore.open(root)
+        _HYP_STORE = (idx, qs)
+    keys = [f"InChI=1S/synthetic/{i}" for i in picks]
+    keys += [f"InChI=1S/absent/{i}" for i in picks[:10]]
+    assert qs.locate_batch(keys) == [idx.lookup(k) for k in keys]
+
+
+def test_lookup_batch_parity_100k(tmp_path):
+    """Acceptance-scale parity: ≥100k keys, digests narrowed to 24 bits so
+    the corpus contains hundreds of seeded digest collisions."""
+    n = 100_000
+    idx = synth_index(n, n_files=31)
+    digest_bits = 24
+    d = digest_u64([f"InChI=1S/synthetic/{i}" for i in range(n)],
+                   bits=digest_bits)
+    n_colliding = int(n - len(np.unique(d)))
+    assert n_colliding > 50, "collision seeding failed"
+    idx.save_sharded(tmp_path / "s", n_shards=16, digest_bits=digest_bits)
+    qs = IndexStore.open(tmp_path / "s")
+    keys = [f"InChI=1S/synthetic/{i}" for i in range(n)]
+    misses = [f"InChI=1S/absent/{i}" for i in range(2000)]
+    locs = qs.locate_batch(keys + misses)
+    for k, loc in zip(keys + misses, locs):
+        assert loc == idx.lookup(k), k
+    assert qs.stats.verify_collisions > 0
+
+
+# ---------------------------------------------------------------------------
+# consumers on top of the store
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    spec = CorpusSpec(n_files=2, records_per_file=150)
+    root = tmp_path_factory.mktemp("corpus") / "c"
+    generate_corpus(root, spec)
+    return RecordStore(root), spec
+
+
+def test_extract_through_index_store(corpus, tmp_path):
+    store, spec = corpus
+    idx = build_index(store)
+    idx.save_sharded(tmp_path / "s", n_shards=4)
+    qs = IndexStore.open(tmp_path / "s")
+    targets = intersect_host(
+        db_id_list(spec, "chembl"), db_id_list(spec, "emolecules")
+    ).ids
+    res_dict = extract(store, idx, targets)
+    res_store = extract(store, qs, targets)
+    assert res_store.records == res_dict.records
+    assert res_store.missing == res_dict.missing
+    assert not res_store.mismatches
+
+
+def test_indexed_dataset_on_index_store(corpus, tmp_path):
+    from repro.data.pipeline import IndexedDataset
+    from repro.data.sampler import GlobalSampler
+
+    store, spec = corpus
+    idx = build_index(store)
+    idx.save_sharded(tmp_path / "s", n_shards=4)
+    qs = IndexStore.open(tmp_path / "s")
+    ds_dict = IndexedDataset(store, idx, seq_len=64)
+    ds_store = IndexedDataset(store, qs, seq_len=64)
+    assert ds_store.keys == ds_dict.keys  # same deterministic ordering
+    sampler = GlobalSampler(n_examples=len(ds_store), global_batch=4, seed=0)
+    a = ds_dict.batch_for(sampler, step=3, dp_rank=0, n_dp=1)
+    b = ds_store.batch_for(sampler, step=3, dp_rank=0, n_dp=1)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["loss_mask"], b["loss_mask"])
+
+
+# ---------------------------------------------------------------------------
+# intersect: shared helpers + intra-table collision-run fix
+# ---------------------------------------------------------------------------
+
+def test_candidate_runs_cover_equal_digest_spans():
+    table = np.array([1, 3, 3, 3, 7], dtype=np.uint64)
+    starts, stops = candidate_runs(table, np.array([0, 3, 7, 9], dtype=np.uint64))
+    assert list(starts) == [0, 1, 4, 5]
+    assert list(stops) == [0, 4, 5, 5]
+
+
+def test_intersect_sorted_survives_intra_table_collisions():
+    """At 8 digest bits distinct ids collide constantly inside the running
+    table; side='left' alone verified only the first of each equal-digest
+    run and dropped true members behind it."""
+    a = [f"InChI=1S/x/{i}" for i in range(400)]
+    b = [f"InChI=1S/x/{i}" for i in range(0, 400, 2)]
+    c = [f"InChI=1S/x/{i}" for i in range(0, 400, 3)]
+    want = intersect_host(a, b, c).ids
+    got = intersect_sorted(a, b, c, digest_bits=8)
+    assert got.ids == want
+    # default width unchanged and still exact
+    assert intersect_sorted(a, b, c).ids == want
