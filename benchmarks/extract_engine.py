@@ -1,0 +1,169 @@
+"""Extraction-engine benchmark — serial vs pipelined read phase.
+
+Measures Algorithm 3's read phase through the three engine stages the
+tentpole adds on top of the paper's forward-seek loop:
+
+* ``extract.serial``         — ``workers=0`` reference: one seek + per-line
+  Python scan + per-record verify (the paper's own loop, the ablation row);
+* ``extract.pipelined_cold`` — coalesced preads + bulk ``$$$$`` splitting +
+  parallel file workers + batched verify, empty cache;
+* ``extract.pipelined_warm`` — same engine with the record cache warm, so
+  repeat extraction (the paper's "re-extraction, no rebuild" scenario)
+  skips both the I/O and the structural re-parse;
+* ``extract.dense_*``        — a dense target set (every 7th record), where
+  inter-target gaps actually fall inside the coalesce threshold and many
+  records ride one pread span (the sparse intersection set sits ~150 KB
+  apart at bench scale, past any sane gap, so its spans stay 1/record).
+
+Besides CSV rows, the module records a machine-readable metrics dict
+(:func:`last_metrics`) which ``benchmarks/run.py`` writes to
+``BENCH_extract.json`` so the extraction perf trajectory is tracked
+across PRs.  Output parity between the serial and pipelined paths is
+asserted, not assumed.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.cache import RecordCache
+from repro.core.extract import extract
+from repro.core.index import build_index
+from repro.core.intersect import intersect_host
+from repro.core.sdfgen import db_id_list
+
+from .common import bench_store, row, timeit
+
+# Coalescing tuned for the bench target density (every 77th record): a
+# 64 KiB gap bridges the typical inter-target distance so spans merge.
+ENGINE_WORKERS = 4
+ENGINE_GAP = 64 * 1024
+
+_LAST: Optional[Dict[str, object]] = None
+
+
+def last_metrics() -> Optional[Dict[str, object]]:
+    """Metrics of the most recent :func:`run` (for BENCH_extract.json)."""
+    return _LAST
+
+
+def _identical(a, b) -> bool:
+    return (
+        list(a.records.items()) == list(b.records.items())
+        and a.missing == b.missing
+        and a.mismatches == b.mismatches
+    )
+
+
+def run() -> List[str]:
+    global _LAST
+    store, spec = bench_store()
+    out = []
+
+    targets = intersect_host(
+        db_id_list(spec, "chembl", extra_outside=25),
+        db_id_list(spec, "emolecules", extra_outside=25),
+    ).ids
+    idx = build_index(store, key_mode="full_id")
+
+    t_serial, res_serial = timeit(lambda: extract(store, idx, targets, workers=0))
+    n = max(res_serial.found, 1)
+    out.append(row(
+        "extract.serial", t_serial,
+        f"found {res_serial.found}; {n / max(t_serial, 1e-9):.0f} rec/s "
+        f"(workers=0: per-record seek + per-line scan)"))
+
+    cache = RecordCache(capacity=2 * len(targets) + 16)
+    t_cold, res_cold = timeit(lambda: extract(
+        store, idx, targets,
+        workers=ENGINE_WORKERS, coalesce_gap=ENGINE_GAP, cache=cache))
+    spans_per_rec = res_cold.spans_read / n
+    out.append(row(
+        "extract.pipelined_cold", t_cold,
+        f"{n / max(t_cold, 1e-9):.0f} rec/s; {res_cold.spans_read} spans "
+        f"({spans_per_rec:.3f}/rec), {res_cold.bytes_read / 1e6:.2f} MB pread, "
+        f"workers={ENGINE_WORKERS}"))
+
+    t_warm, res_warm = timeit(lambda: extract(
+        store, idx, targets,
+        workers=ENGINE_WORKERS, coalesce_gap=ENGINE_GAP, cache=cache))
+    hit_rate = res_warm.cache_hits / max(res_warm.seeks, 1)
+    out.append(row(
+        "extract.pipelined_warm", t_warm,
+        f"{n / max(t_warm, 1e-9):.0f} rec/s; cache {res_warm.cache_hits}/"
+        f"{res_warm.seeks} hits ({hit_rate:.0%}), {res_warm.spans_read} spans"))
+
+    parity = _identical(res_serial, res_cold) and _identical(res_serial, res_warm)
+    speedup_cold = t_serial / max(t_cold, 1e-9)
+    speedup_warm = t_serial / max(t_warm, 1e-9)
+    out.append(row(
+        "extract.speedup", 0.0,
+        f"cold {speedup_cold:.1f}x, warm {speedup_warm:.1f}x vs serial; "
+        f"parity={'ok' if parity else 'BROKEN'}; plan/read split "
+        f"{res_cold.plan_seconds * 1e3:.1f}/{res_cold.read_seconds * 1e3:.1f} ms"))
+
+    # dense extraction: every-7th-record targets keep inter-target gaps
+    # inside the coalesce threshold, so span merging actually engages
+    dense = db_id_list(spec, "chembl")
+    t_dser, res_dser = timeit(lambda: extract(store, idx, dense, workers=0))
+    t_deng, res_deng = timeit(lambda: extract(
+        store, idx, dense, workers=ENGINE_WORKERS, coalesce_gap=ENGINE_GAP))
+    nd = max(res_dser.found, 1)
+    dense_spans_per_rec = res_deng.spans_read / nd
+    dense_parity = _identical(res_dser, res_deng)
+    out.append(row(
+        "extract.dense_coalesced", t_deng,
+        f"{nd} records via {res_deng.spans_read} spans "
+        f"({dense_spans_per_rec:.3f}/rec, {nd / max(res_deng.spans_read, 1):.0f} "
+        f"rec/span); {t_dser / max(t_deng, 1e-9):.1f}x vs serial "
+        f"{t_dser * 1e3:.0f} ms, parity={'ok' if dense_parity else 'BROKEN'}"))
+    parity = parity and dense_parity
+
+    _LAST = {
+        "corpus": {
+            "files": spec.n_files,
+            "records_per_file": spec.records_per_file,
+            "targets": len(targets),
+            "records_extracted": res_serial.found,
+        },
+        "engine": {
+            "workers": ENGINE_WORKERS,
+            "coalesce_gap": ENGINE_GAP,
+            "cache_capacity": cache.capacity,
+        },
+        "serial": {
+            "seconds": t_serial,
+            "records_per_sec": n / max(t_serial, 1e-9),
+            "plan_seconds": res_serial.plan_seconds,
+            "read_seconds": res_serial.read_seconds,
+        },
+        "pipelined_cold": {
+            "seconds": t_cold,
+            "records_per_sec": n / max(t_cold, 1e-9),
+            "plan_seconds": res_cold.plan_seconds,
+            "read_seconds": res_cold.read_seconds,
+            "spans_read": res_cold.spans_read,
+            "spans_per_record": spans_per_rec,
+            "bytes_read": res_cold.bytes_read,
+        },
+        "pipelined_warm": {
+            "seconds": t_warm,
+            "records_per_sec": n / max(t_warm, 1e-9),
+            "cache_hits": res_warm.cache_hits,
+            "cache_hit_rate": hit_rate,
+        },
+        "dense": {
+            "targets": len(dense),
+            "records_extracted": res_dser.found,
+            "serial_seconds": t_dser,
+            "engine_seconds": t_deng,
+            "records_per_sec": nd / max(t_deng, 1e-9),
+            "spans_read": res_deng.spans_read,
+            "spans_per_record": dense_spans_per_rec,
+            "speedup": t_dser / max(t_deng, 1e-9),
+        },
+        "speedup_cold": speedup_cold,
+        "speedup_warm": speedup_warm,
+        "parity": parity,
+    }
+    return out

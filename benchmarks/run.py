@@ -8,21 +8,40 @@ Prints ``name,us_per_call,derived`` CSV rows (harness convention) covering:
   Table IV  — hashed-key vs full-id identifier strategies
   Eq. 4/5   — collision counts vs birthday bound + §VI discovery/migration
   Fig. 2    — runtime scaling and baseline/index crossover
+  extract   — serial vs pipelined extraction engine (+ record cache)
   kernels   — TPU-adapted hot-loop throughput (hash_mix, sorted_probe)
 
 Corpus scale via REPRO_BENCH_FILES / REPRO_BENCH_RPF env vars.
 Roofline numbers come from the dry-run (results/dryrun.jsonl), not here.
+
+The extraction-engine module additionally emits machine-readable metrics
+to ``BENCH_extract.json`` at the repo root (override the path with
+``REPRO_BENCH_EXTRACT_OUT``) so records/sec, spans/record, cache hit rate
+and the serial→pipelined speedup are tracked across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+from pathlib import Path
+
+
+def _write_extract_metrics(metrics) -> None:
+    if not metrics:
+        return
+    out = os.environ.get("REPRO_BENCH_EXTRACT_OUT")
+    path = Path(out) if out else Path(__file__).resolve().parents[1] / "BENCH_extract.json"
+    path.write_text(json.dumps(metrics, indent=1, sort_keys=True) + "\n")
+    print(f"extract.metrics_written,0,{path}", flush=True)
 
 
 def main() -> None:
     from . import (
         collisions_eq45,
+        extract_engine,
         fig2_scaling,
         kernels_tpu,
         table1_scan,
@@ -38,6 +57,7 @@ def main() -> None:
         ("table4", table4_identifiers),
         ("eq45", collisions_eq45),
         ("fig2", fig2_scaling),
+        ("extract", extract_engine),
         ("kernels", kernels_tpu),
     ]
     print("name,us_per_call,derived")
@@ -54,6 +74,7 @@ def main() -> None:
             f"{name}.total,{(time.perf_counter()-t0)*1e6:.0f},",
             flush=True,
         )
+    _write_extract_metrics(extract_engine.last_metrics())
     if failures:
         sys.exit(1)
 

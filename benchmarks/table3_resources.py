@@ -57,7 +57,10 @@ def run() -> List[str]:
         csv_bytes = idx.save_csv(csv_path)
     ram_bytes = _index_ram_bytes(idx)
 
-    _, res = timeit(lambda: extract(store, idx, targets))
+    # workers=0: the serial path's bytes_read counts exactly the record
+    # text fetched (the paper's targeted-read volume); the engine's count
+    # includes coalescing overshoot, reported separately below
+    _, res = timeit(lambda: extract(store, idx, targets, workers=0))
     indexed_io = res.bytes_read
 
     avg_rec = corpus_bytes / max(len(idx), 1)
@@ -76,6 +79,17 @@ def run() -> List[str]:
                    f"= -{(1 - indexed_io/max(baseline_io,1))*100:.2f}% "
                    f"(paper: -99.7%); note baseline here is ONE set-scan — "
                    f"the paper's figure multiplies by re-extraction count"))
+
+    # the pipelined engine trades bounded read amplification (span guess +
+    # gap bridging) for far fewer syscalls — measure the trade, don't
+    # assert it
+    _, res_eng = timeit(lambda: extract(store, idx, targets))
+    out.append(row("table3.engine_read_amplification", 0.0,
+                   f"engine pread {res_eng.bytes_read/1e6:.3f} MB over "
+                   f"{res_eng.spans_read} spans for {res_eng.seeks} records "
+                   f"({res_eng.bytes_read/max(indexed_io,1):.1f}x record "
+                   f"bytes, {res_eng.seeks/max(res_eng.spans_read,1):.1f} "
+                   f"records/span)"))
 
     # ---- packed serving formats: monolithic binary vs sharded store --------
     # query batch = every target, plus misses (the common case in serving)

@@ -8,21 +8,27 @@ verification catch the collisions; then migrated to full canonical ids,
 verifying zero mismatches, with the Eq. 4/5 birthday-bound analysis.
 Finally the migrated index is published as the sharded mmap-backed
 ``IndexStore`` and the whole target list is served through one batched
-``lookup_batch`` call — the serving-grade query path.
+``lookup_batch`` call — the serving-grade query path — and the read phase
+itself is re-run through the pipelined extraction engine (coalesced
+preads, parallel file workers, record cache) to show the serial loop and
+the engine produce identical output at very different speeds.
 
     PYTHONPATH=src python examples/integrate_databases.py [--records 24000]
 """
 
 import argparse
 import tempfile
+import time
 from pathlib import Path
 
 from repro.core import (
     IndexStore,
+    RecordCache,
     RecordStore,
     birthday_expectation,
     build_index,
     extract,
+    extract_iter,
     intersect_host,
     scan_corpus,
 )
@@ -103,6 +109,33 @@ def main():
     assert res_s.found == res_f.found and not res_s.mismatches
     print(f"  extraction through the store matches the dict index "
           f"({res_s.found} records) — same truth, O(touched shards) memory")
+
+    # ---- phase 5: pipelined read engine + record cache (beyond-paper) ------
+    print("\n— phase 5: pipelined extraction engine (coalesced preads + cache) —")
+    t0 = time.perf_counter()
+    res_serial = extract(store, qs, targets, workers=0)
+    t_serial = time.perf_counter() - t0
+    cache = RecordCache(capacity=2 * len(targets))
+    t0 = time.perf_counter()
+    res_p = extract(store, qs, targets, workers=4, coalesce_gap=64 * 1024,
+                    cache=cache)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_w = extract(store, qs, targets, workers=4, coalesce_gap=64 * 1024,
+                    cache=cache)
+    t_warm = time.perf_counter() - t0
+    assert list(res_p.records.items()) == list(res_serial.records.items())
+    assert list(res_w.records.items()) == list(res_serial.records.items())
+    print(f"  serial workers=0: {t_serial*1e3:.0f} ms; pipelined cold: "
+          f"{t_cold*1e3:.0f} ms ({res_p.spans_read} pread spans for "
+          f"{res_p.seeks} records); warm: {t_warm*1e3:.0f} ms "
+          f"({res_w.cache_hits}/{res_w.seeks} cache hits)")
+    print(f"  byte-identical output on all three paths; warm speedup "
+          f"{t_serial/max(t_warm, 1e-9):.1f}x")
+    # streaming consumption: records arrive as their file worker verifies
+    n_stream = sum(1 for _ in extract_iter(store, qs, targets, cache=cache))
+    print(f"  extract_iter streamed {n_stream} verified records "
+          f"(plan/probe amortized through the same lookup_batch)")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,10 @@
 # smoke of the sorted_probe Pallas kernel (stage B runs through the Pallas
 # interpreter, so kernel regressions surface even on CPU-only machines),
 # a sharded-store round trip (build → save_sharded → reopen → lookup_batch),
-# and a smoke-scale pass of the full benchmark harness so the bench modules
-# can't silently rot.
+# a pipelined-extraction smoke (parallel engine vs serial loop parity on a
+# collision-seeded corpus), and a smoke-scale pass of the full benchmark
+# harness — which must also produce the BENCH_extract.json metrics file —
+# so the bench modules can't silently rot.
 #
 # Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
@@ -64,17 +66,64 @@ print(f"index store OK: {len(present)} hits, {len(absent)} misses, "
       f"{qs.stats.bloom_rejects} bloom rejects")
 PY
 
+echo "== extraction engine smoke: pipelined vs serial parity =="
+python - <<'PY'
+import tempfile
+from pathlib import Path
+from repro.core import RecordCache, RecordStore, build_index, extract, intersect_host
+from repro.core.sdfgen import CorpusSpec, db_id_list, generate_corpus
+
+# 1500 records into a 16-bit key space: hashed collisions land in the
+# target set, so the mismatch path is part of the parity check
+spec = CorpusSpec(n_files=3, records_per_file=500, key_bits=16)
+root = Path(tempfile.mkdtemp()) / "c"
+generate_corpus(root, spec)
+store = RecordStore(root)
+targets = intersect_host(
+    db_id_list(spec, "chembl", extra_outside=10),
+    db_id_list(spec, "emolecules", extra_outside=10),
+).ids
+idx = build_index(store, key_mode="hashed_key", key_bits=16)
+serial = extract(store, idx, targets, key_bits=16, workers=0)
+cache = RecordCache(capacity=1024)
+piped = extract(store, idx, targets, key_bits=16, workers=4, cache=cache)
+warm = extract(store, idx, targets, key_bits=16, workers=4, cache=cache)
+for other in (piped, warm):
+    assert list(other.records.items()) == list(serial.records.items())
+    assert other.missing == serial.missing
+    assert other.mismatches == serial.mismatches
+assert warm.cache_hits == warm.seeks and warm.spans_read == 0
+assert serial.mismatches, "smoke corpus no longer seeds collisions"
+print(f"extraction engine OK: {serial.found} records, "
+      f"{len(serial.missing)} missing, {len(serial.mismatches)} mismatches "
+      f"identical on serial/pipelined/warm; {piped.spans_read} spans cold, "
+      f"{warm.cache_hits} cache hits warm")
+PY
+
 echo "== bench smoke: full harness at smoke scale =="
 BENCH_OUT=$(mktemp)
+BENCH_JSON=$(mktemp -u)
 if ! REPRO_BENCH_FILES=2 REPRO_BENCH_RPF=250 \
      REPRO_BENCH_CACHE="${TMPDIR:-/tmp}/repro_bench_smoke" \
+     REPRO_BENCH_EXTRACT_OUT="$BENCH_JSON" \
      python -m benchmarks.run > "$BENCH_OUT"; then
   echo "benchmark harness failed:"
   grep '\.ERROR,' "$BENCH_OUT" || tail -5 "$BENCH_OUT"
-  rm -f "$BENCH_OUT"
+  rm -f "$BENCH_OUT" "$BENCH_JSON"
   exit 1
 fi
 echo "bench harness OK: $(wc -l < "$BENCH_OUT") CSV rows"
-rm -f "$BENCH_OUT"
+test -s "$BENCH_JSON" || { echo "BENCH_extract.json not produced"; exit 1; }
+python - "$BENCH_JSON" <<'PY'
+import json, sys
+m = json.load(open(sys.argv[1]))
+for key in ("serial", "pipelined_cold", "pipelined_warm",
+            "speedup_warm", "parity"):
+    assert key in m, f"BENCH_extract.json missing {key!r}"
+assert m["parity"] is True, "serial vs pipelined output diverged"
+print(f"BENCH_extract.json OK: warm speedup {m['speedup_warm']:.1f}x, "
+      f"cache hit rate {m['pipelined_warm']['cache_hit_rate']:.0%}")
+PY
+rm -f "$BENCH_OUT" "$BENCH_JSON"
 
 echo "== all checks passed =="

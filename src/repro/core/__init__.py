@@ -2,6 +2,8 @@
 
 Phase 1 (index construction, Algorithm 2)  → :mod:`repro.core.index`
 Phase 2 (targeted extraction, Algorithm 3) → :mod:`repro.core.extract`
+Pipelined read engine (coalesced preads)   → :mod:`repro.core.reader`
+Record-content LRU cache                   → :mod:`repro.core.cache`
 Baseline (naïve scan, Algorithm 1)         → :mod:`repro.core.baseline`
 Identifier layer (InChI/InChIKey roles)    → :mod:`repro.core.identifiers`
 Collision discovery (§VI, Eq. 4/5)         → :mod:`repro.core.collisions`
@@ -21,7 +23,9 @@ from .collisions import (
     scan_corpus,
     scan_pairs_sorted,
 )
-from .extract import ExtractionResult, Mismatch, extract, plan_extraction
+from .cache import CacheStats, RecordCache
+from .extract import ExtractionResult, Mismatch, extract, extract_iter, plan_extraction
+from .reader import ReadStats, coalesce_spans, compare_ids_batch, stream_plan
 from .identifiers import (
     DEFAULT_KEY_BITS,
     PAPER_KEY_BITS,

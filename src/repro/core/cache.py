@@ -1,0 +1,146 @@
+"""Bounded LRU record-content cache — the layer in front of the store.
+
+Extraction re-runs (the paper's "re-extraction with modified criteria, no
+index rebuild", Table II) and the training loader's epoch loops fetch the
+same records over and over.  The byte-offset index makes each fetch O(1)
+in *seeks*, but every fetch still pays a ``pread`` plus — far more
+expensive at our record sizes — a full structural re-parse for defensive
+verification.  This cache remembers both: the raw record text *and* the
+canonical id recomputed from it, keyed by the record's physical location
+``(file_id, offset)``.
+
+Location keys (not identifier keys) make the cache correct under every
+key_mode: hashed-key collisions map two different lookup keys to one
+location, and the cache serves both from a single entry while the
+verification compare still runs against each caller's expected id.
+
+Entries are LRU-evicted by record count and optionally by total cached
+bytes.  All operations are thread-safe (the extraction engine's file
+workers share one cache), and hit/miss/eviction counters are kept for the
+benchmarks' cache-hit-rate row.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+__all__ = ["CacheStats", "RecordCache"]
+
+
+@dataclass
+class CacheStats:
+    """Cumulative counters across the cache's lifetime."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    inserts: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class RecordCache:
+    """LRU cache of ``(file_id, offset) -> (record_text, recomputed_id)``.
+
+    ``recomputed_id`` is the canonical id re-derived from the record's
+    structural data (``canonical_id_from_structure``), or ``None`` when the
+    entry was inserted without verification.  Caching the recomputed id is
+    what makes a warm cache fast: a verified re-fetch becomes one dict
+    lookup plus one id compare — no I/O, no parse.
+
+    ``capacity`` bounds the entry count; ``max_bytes`` (optional)
+    additionally bounds the total cached record text, so one pathological
+    corpus of huge records cannot blow the memory budget.
+    """
+
+    def __init__(self, capacity: int = 4096, max_bytes: Optional[int] = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        self.capacity = capacity
+        self.max_bytes = max_bytes
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[Tuple[str, int], Tuple[str, Optional[str]]]" = (
+            OrderedDict()
+        )
+        self._bytes = 0
+
+    # -- core operations ----------------------------------------------------
+
+    def get(self, file_id: str, offset: int) -> Optional[Tuple[str, Optional[str]]]:
+        """``(text, recomputed_id)`` for a cached location, else ``None``."""
+        key = (file_id, offset)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return entry
+
+    def put(
+        self,
+        file_id: str,
+        offset: int,
+        text: str,
+        recomputed_id: Optional[str] = None,
+    ) -> None:
+        """Insert or refresh an entry (refresh also promotes to MRU).
+
+        Refreshing never *forgets* a recomputed id: an insert with
+        ``recomputed_id=None`` over an already-verified entry keeps the
+        verified id (recomputation is deterministic, so the stored id stays
+        correct for the unchanged text).
+        """
+        key = (file_id, offset)
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._bytes -= len(old[0])
+                if recomputed_id is None:
+                    recomputed_id = old[1]
+            else:
+                self.stats.inserts += 1
+            self._entries[key] = (text, recomputed_id)
+            self._bytes += len(text)
+            while len(self._entries) > self.capacity or (
+                self.max_bytes is not None
+                and self._bytes > self.max_bytes
+                and len(self._entries) > 1
+            ):
+                _, (etext, _) = self._entries.popitem(last=False)
+                self._bytes -= len(etext)
+                self.stats.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes = 0
+
+    # -- introspection ------------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: Tuple[str, int]) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    @property
+    def cached_bytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    @property
+    def hit_rate(self) -> float:
+        return self.stats.hit_rate

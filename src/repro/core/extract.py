@@ -1,8 +1,8 @@
 """Algorithm 3 — index-based extraction with grouped, offset-sorted seeks.
 
-Phase 2 of the paper's architecture.  The three published optimizations are
-all here and individually switchable (so the benchmarks can ablate them,
-Table II / §IV.D):
+Phase 2 of the paper's architecture.  The three published optimizations
+are all here and individually switchable (so the benchmarks can ablate
+them, Table II / §IV.D):
 
 1. **GroupByFilename** — one ``open()`` per file containing targets
    (477,123 potential opens → 312 in the paper).
@@ -15,20 +15,42 @@ Table II / §IV.D):
    identifier.  This is the step that exposed the paper's InChIKey
    collisions (§VI.A): under ``hashed_key`` indexing, a collision fetches a
    structurally different molecule whose recomputed full id mismatches.
+
+Beyond the paper, the read phase itself is pipelined
+(:mod:`repro.core.reader`): targets coalesce into merged ``pread`` spans,
+record boundaries come from bulk ``bytes.find`` scans, files fan out over
+a thread pool, verification compares digest batches, and a
+:class:`~repro.core.cache.RecordCache` can absorb repeat fetches.
+``workers=0`` preserves the exact serial reference loop for the ablation
+rows; both paths produce byte-identical ``records``/``missing``/
+``mismatches``.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from pathlib import Path
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
-from .identifiers import canonical_id_from_structure, hashed_key
-from .records import RecordStore, extract_property, read_record_at
-from .sdfgen import PROP_ID
+from .cache import RecordCache
+from .identifiers import hashed_key
+from .reader import (
+    DEFAULT_COALESCE_GAP,
+    DEFAULT_SPAN_GUESS,
+    DEFAULT_WORKERS,
+    ReadStats,
+    _recompute,
+    stream_plan,
+)
+from .records import RecordStore, read_record_at
 
-__all__ = ["ExtractionResult", "Mismatch", "plan_extraction", "extract"]
+__all__ = [
+    "ExtractionResult",
+    "Mismatch",
+    "extract",
+    "extract_iter",
+    "plan_extraction",
+]
 
 
 @dataclass(frozen=True)
@@ -48,13 +70,21 @@ class ExtractionResult:
     missing: List[str] = field(default_factory=list)        # not in index
     mismatches: List[Mismatch] = field(default_factory=list)
     files_opened: int = 0
-    seeks: int = 0
-    bytes_read: int = 0
-    seconds: float = 0.0
+    seeks: int = 0            # records fetched (one logical seek per target)
+    bytes_read: int = 0       # bytes actually read (incl. coalescing overshoot)
+    spans_read: int = 0       # pread spans issued (0 on the serial path)
+    cache_hits: int = 0       # records served from the RecordCache
+    plan_seconds: float = 0.0  # plan/probe phase (batched index lookups)
+    read_seconds: float = 0.0  # read+verify phase (Algorithm 3's loop)
 
     @property
     def found(self) -> int:
         return len(self.records)
+
+    @property
+    def seconds(self) -> float:
+        """Total wall time (plan + read), kept for back-compatibility."""
+        return self.plan_seconds + self.read_seconds
 
 
 def plan_extraction(
@@ -110,50 +140,175 @@ def extract(
     sort_offsets: bool = True,
     group_by_file: bool = True,
     key_bits: int = 64,
+    workers: Optional[int] = None,
+    coalesce_gap: int = DEFAULT_COALESCE_GAP,
+    span_guess: int = DEFAULT_SPAN_GUESS,
+    cache: Optional[RecordCache] = None,
+    verify_backend: str = "auto",
 ) -> ExtractionResult:
     """Algorithm 3: seek-extract every target through the index.
 
-    With ``group_by_file=False`` the ungrouped access pattern (one open per
-    target) is used — kept for the ablation benchmark only.
+    ``workers`` selects the read path: ``None`` (default) uses the
+    pipelined engine with :data:`~repro.core.reader.DEFAULT_WORKERS`
+    threads; any ``workers >= 1`` pins the engine's pool size; ``workers=0``
+    runs the serial reference loop (one ``seek`` + per-line scan + per-record
+    verify) — the ablation baseline the benchmarks compare against.  Both
+    paths return byte-identical ``records``/``missing``/``mismatches``.
+
+    ``coalesce_gap``/``span_guess`` tune the engine's pread coalescing and
+    ``cache`` (a :class:`~repro.core.cache.RecordCache`) serves repeat
+    fetches without re-reading — see :mod:`repro.core.reader`.
+
+    The access-pattern ablations always take the serial loop, because the
+    engine has no unsorted/ungrouped mode (it coalesces in offset order by
+    construction): ``group_by_file=False`` is one open per target, and
+    ``sort_offsets=False`` visits each file's targets in lookup order.
     """
     t0 = time.perf_counter()
     res = ExtractionResult()
     plan, missing = plan_extraction(index, targets, key_bits, sort_offsets)
     res.missing = missing
+    res.plan_seconds = time.perf_counter() - t0
 
-    def handle_record(full_id: str, key: str, fname: str, off: int, text: str):
-        res.seeks += 1
-        res.bytes_read += len(text)
-        if verify:
-            try:
-                recomputed = canonical_id_from_structure(text)
-            except ValueError:
-                recomputed = "<unparseable>"
-            if recomputed != full_id:
-                # The paper's "log error" branch — and the collision signal.
+    t1 = time.perf_counter()
+    found: Dict[str, str] = {}
+
+    if workers is None:
+        workers = DEFAULT_WORKERS
+
+    if group_by_file and sort_offsets and workers > 0:
+        # pipelined engine: coalesced preads, parallel file workers,
+        # batched digest verification, optional record cache
+        stats = ReadStats()
+        for ev in stream_plan(
+            store,
+            plan,
+            verify=verify,
+            workers=workers,
+            coalesce_gap=coalesce_gap,
+            span_guess=span_guess,
+            cache=cache,
+            verify_backend=verify_backend,
+            stats=stats,
+        ):
+            res.seeks += 1
+            if ev.ok:
+                found[ev.full_id] = ev.text
+            else:
                 res.mismatches.append(
-                    Mismatch(full_id, recomputed, fname, off, key)
+                    Mismatch(ev.full_id, ev.found_id, ev.file, ev.offset, ev.key)
                 )
-                return
-        res.records[full_id] = text
-
-    if group_by_file:
-        for fname, items in plan.items():
-            path = store.path_of(fname)
-            res.files_opened += 1
-            with open(path, "rb") as handle:
-                # offsets ascend (sort_offsets) => forward-only seeks, the
-                # paper's near-sequential access pattern.
-                for full_id, key, off in items:
-                    text = read_record_at(handle, off)
-                    handle_record(full_id, key, fname, off, text)
+        res.files_opened = stats.files_opened
+        res.bytes_read = stats.bytes_read
+        res.spans_read = stats.spans_read
+        res.cache_hits = stats.cache_hits
     else:
-        for fname, items in plan.items():
-            path = store.path_of(fname)
-            for full_id, key, off in items:
-                res.files_opened += 1
-                text = read_record_at(path, off)
-                handle_record(full_id, key, fname, off, text)
+        # serial reference paths (ablations): grouped forward seeks with the
+        # per-line scan, or fully ungrouped one-open-per-target access
+        def handle_record(full_id: str, key: str, fname: str, off: int, text: str):
+            res.seeks += 1
+            res.bytes_read += len(text)
+            if verify:
+                recomputed = _recompute(text)
+                if recomputed != full_id:
+                    # The paper's "log error" branch — and the collision signal.
+                    res.mismatches.append(
+                        Mismatch(full_id, recomputed, fname, off, key)
+                    )
+                    return
+            found[full_id] = text
 
-    res.seconds = time.perf_counter() - t0
+        if group_by_file:
+            for fname, items in plan.items():
+                path = store.path_of(fname)
+                res.files_opened += 1
+                with open(path, "rb") as handle:
+                    # offsets ascend (sort_offsets) => forward-only seeks,
+                    # the paper's near-sequential access pattern.
+                    for full_id, key, off in items:
+                        text = read_record_at(handle, off)
+                        handle_record(full_id, key, fname, off, text)
+        else:
+            for fname, items in plan.items():
+                path = store.path_of(fname)
+                for full_id, key, off in items:
+                    res.files_opened += 1
+                    text = read_record_at(path, off)
+                    handle_record(full_id, key, fname, off, text)
+
+    # Deterministic output regardless of worker interleaving: records in
+    # target order, mismatches in (file, offset) order — so the serial and
+    # pipelined paths compare byte-identical.
+    res.records = {t: found[t] for t in targets if t in found}
+    res.mismatches.sort(key=lambda m: (m.file, m.offset, m.expected_id))
+    res.read_seconds = time.perf_counter() - t1
     return res
+
+
+def extract_iter(
+    store: RecordStore,
+    index,
+    targets: Sequence[str],
+    *,
+    verify: bool = True,
+    key_bits: int = 64,
+    workers: Optional[int] = None,
+    coalesce_gap: int = DEFAULT_COALESCE_GAP,
+    span_guess: int = DEFAULT_SPAN_GUESS,
+    cache: Optional[RecordCache] = None,
+    verify_backend: str = "auto",
+    result: Optional[ExtractionResult] = None,
+) -> Iterator[Tuple[str, str]]:
+    """Streaming Algorithm 3: yield ``(full_id, record)`` as verified.
+
+    Records are emitted as soon as their file worker has read and verified
+    them, so consumers (tokenizers, property extractors, network writers)
+    overlap with reads still in flight instead of waiting for the whole
+    extraction.  Yield order is completion order, not target order.
+
+    Pass ``result`` (an :class:`ExtractionResult`) to also collect
+    ``missing``/``mismatches`` and the I/O counters; its ``records`` dict
+    stays empty — the stream IS the record channel.  ``workers=0`` is
+    coerced to 1 (the engine is the only streaming path; use
+    :func:`extract` for the serial ablation, whose access-pattern knobs —
+    ``sort_offsets``/``group_by_file`` — do not apply here: the engine
+    always reads each file's targets in coalesced offset order).
+    """
+    t0 = time.perf_counter()
+    plan, missing = plan_extraction(index, targets, key_bits)
+    if result is not None:
+        result.missing = missing
+        result.plan_seconds = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    stats = ReadStats()
+    if workers is None:
+        workers = DEFAULT_WORKERS
+    try:
+        for ev in stream_plan(
+            store,
+            plan,
+            verify=verify,
+            workers=max(1, workers),
+            coalesce_gap=coalesce_gap,
+            span_guess=span_guess,
+            cache=cache,
+            verify_backend=verify_backend,
+            stats=stats,
+        ):
+            if result is not None:
+                result.seeks += 1
+            if ev.ok:
+                yield ev.full_id, ev.text
+            elif result is not None:
+                result.mismatches.append(
+                    Mismatch(ev.full_id, ev.found_id, ev.file, ev.offset, ev.key)
+                )
+    finally:
+        if result is not None:
+            result.files_opened += stats.files_opened
+            result.bytes_read += stats.bytes_read
+            result.spans_read += stats.spans_read
+            result.cache_hits += stats.cache_hits
+            result.mismatches.sort(key=lambda m: (m.file, m.offset, m.expected_id))
+            result.read_seconds = time.perf_counter() - t1

@@ -354,9 +354,15 @@ def build_index(
 
 
 def file_fingerprints(store: RecordStore) -> Dict[str, Tuple[int, int]]:
-    """``name → (size, mtime_ns)`` for change detection."""
+    """``name → (size, mtime_ns)`` for change detection.
+
+    This is the change-detection entry point, so it is the one place that
+    must see the directory as it is NOW — refresh the store's cached
+    listing before fingerprinting.
+    """
     return {
-        p.name: (p.stat().st_size, p.stat().st_mtime_ns) for p in store.files()
+        p.name: (p.stat().st_size, p.stat().st_mtime_ns)
+        for p in store.refresh().files()
     }
 
 

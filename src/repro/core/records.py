@@ -18,6 +18,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 __all__ = [
     "RECORD_DELIM",
     "RecordStore",
+    "find_record_end",
     "iter_records",
     "iter_record_offsets",
     "read_record_at",
@@ -37,15 +38,32 @@ class RecordStore:
     The paper's corpus: 354 files × ~500k records.  Files are discovered in
     sorted order so that ``file_id`` (the integer position used by compact
     index encodings) is stable.
+
+    The sorted listing is computed once on first use and reused —
+    ``files()``/``file_names()``/``total_bytes()`` sit inside per-file
+    extraction and scan loops, and re-globbing the directory for each call
+    is pure syscall waste on a corpus that almost never changes.  Callers
+    that DO change the directory (incremental index updates) must
+    :meth:`refresh` before relisting.
     """
 
     root: Path
 
     def __post_init__(self):
         object.__setattr__(self, "root", Path(self.root))
+        object.__setattr__(self, "_files_cache", None)
 
     def files(self) -> List[Path]:
-        return sorted(self.root.glob("*.sdf"))
+        cached = self._files_cache
+        if cached is None:
+            cached = sorted(self.root.glob("*.sdf"))
+            object.__setattr__(self, "_files_cache", cached)
+        return cached
+
+    def refresh(self) -> "RecordStore":
+        """Invalidate the cached listing (directory contents changed)."""
+        object.__setattr__(self, "_files_cache", None)
+        return self
 
     def file_names(self) -> List[str]:
         return [p.name for p in self.files()]
@@ -60,6 +78,83 @@ class RecordStore:
         return len(self.files())
 
 
+def find_record_end(buf: bytes, rel: int, at_eof: bool) -> Tuple[int, int, bool]:
+    """Locate the ``$$$$`` terminator line of the record starting at ``rel``.
+
+    The single home of the delimiter-line grammar, shared by the bulk
+    sequential scanners below and the pipelined extraction engine's span
+    splitter (:mod:`repro.core.reader`): a terminator is ``$$$$`` at a line
+    start followed only by ``\\r``s before its newline (or before EOF) —
+    exactly the per-line path's ``line.rstrip(b"\\n\\r") == b"$$$$"`` test,
+    found with C-speed ``bytes.find`` instead of a line loop.  ``rel``
+    must be a line start (record starts always are).
+
+    Returns ``(end, next_start, definite)``: ``end`` is where the record's
+    bytes stop (the terminator line's first byte, or ``len(buf)`` when no
+    terminator exists before EOF); ``next_start`` is the position just past
+    the terminator line (``end == next_start`` means no terminator was
+    found — an unterminated trailing record).  ``definite=False`` means the
+    buffer ended before the answer was certain (no delimiter yet, or a
+    candidate whose line might continue past the buffer) — the caller must
+    extend the buffer unless ``at_eof``.
+    """
+    n = len(buf)
+    pos = rel
+    while True:
+        idx = buf.find(RECORD_DELIM, pos)
+        if idx == -1:
+            return n, n, at_eof
+        if idx > 0 and buf[idx - 1] != 0x0A:
+            pos = idx + 1  # mid-line "$$$$": record content
+            continue
+        j = idx + 4
+        while j < n and buf[j] == 0x0D:
+            j += 1
+        if j >= n:
+            # "$$$$\r*" flush against the buffer end: at EOF the per-line
+            # path's rstrip accepts it; otherwise the line may continue.
+            return idx, n, at_eof
+        if buf[j] == 0x0A:
+            return idx, j + 1, True
+        pos = j  # "$$$$junk": record content, keep scanning
+
+
+def _iter_delimited(path: Path) -> Iterator[Tuple[int, bytes, bool]]:
+    """Yield ``(start_offset, raw_record_bytes, terminated)`` per record.
+
+    The shared sequential-scan core: chunked binary reads split with
+    :func:`find_record_end` instead of a per-line Python loop.
+    ``terminated`` is False only for a trailing record with no closing
+    delimiter.
+    """
+    with open(path, "rb") as f:
+        buf = b""
+        base = 0          # absolute file offset of buf[0]
+        start = 0         # absolute offset of the current record's first byte
+        at_eof = False
+        while True:
+            rel = start - base
+            end, nxt, definite = find_record_end(buf, rel, at_eof)
+            if definite:
+                if nxt > end:  # terminator found
+                    yield start, buf[rel:end], True
+                    start = base + nxt
+                    continue
+                tail = buf[rel:]  # EOF with no terminator
+                if tail.strip():
+                    yield start, tail, False
+                return
+            # need more bytes: drop the consumed prefix, then refill
+            if rel > 0:
+                buf = buf[rel:]
+                base = start
+            chunk = f.read(_READ_CHUNK)
+            if chunk:
+                buf += chunk
+            else:
+                at_eof = True
+
+
 def iter_records(path: Path) -> Iterator[Tuple[int, str]]:
     """Yield ``(byte_offset, record_text)`` for every record in ``path``.
 
@@ -67,21 +162,8 @@ def iter_records(path: Path) -> Iterator[Tuple[int, str]]:
     are byte positions of the first byte of each record.  The trailing
     ``$$$$`` line is not included in ``record_text``.
     """
-    with open(path, "rb", buffering=_READ_CHUNK) as f:
-        offset = 0
-        start = 0
-        buf: List[bytes] = []
-        for line in f:
-            if line.rstrip(b"\n\r") == RECORD_DELIM:
-                yield start, b"".join(buf).decode("utf-8", "replace")
-                offset += len(line)
-                start = offset
-                buf = []
-            else:
-                buf.append(line)
-                offset += len(line)
-        if buf and any(ln.strip() for ln in buf):
-            yield start, b"".join(buf).decode("utf-8", "replace")
+    for start, raw, _terminated in _iter_delimited(path):
+        yield start, raw.decode("utf-8", "replace")
 
 
 def iter_record_offsets(path: Path) -> Iterator[int]:
@@ -89,23 +171,11 @@ def iter_record_offsets(path: Path) -> Iterator[int]:
 
     This is ``ScanLineOffsets`` from Algorithm 2, fused with record
     detection: a single streaming pass that only tracks byte positions.
+    Blank records (nothing but whitespace before the delimiter) carry no
+    indexable content and are skipped, as before.
     """
-    with open(path, "rb", buffering=_READ_CHUNK) as f:
-        offset = 0
-        start = 0
-        saw_content = False
-        for line in f:
-            if line.rstrip(b"\n\r") == RECORD_DELIM:
-                if saw_content:
-                    yield start
-                offset += len(line)
-                start = offset
-                saw_content = False
-            else:
-                offset += len(line)
-                if line.strip():
-                    saw_content = True
-        if saw_content:
+    for start, raw, _terminated in _iter_delimited(path):
+        if raw.strip():
             yield start
 
 

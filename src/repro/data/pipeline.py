@@ -25,13 +25,21 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.cache import RecordCache
 from repro.core.extract import plan_extraction
 from repro.core.identifiers import canonical_id_from_structure
+from repro.core.reader import (
+    DEFAULT_COALESCE_GAP,
+    DEFAULT_SPAN_GUESS,
+    ReadStats,
+    stream_plan,
+)
 from repro.core.records import RecordStore, read_record_at
 from repro.data.sampler import GlobalSampler
 from repro.data.tokenizer import ByteTokenizer, render_example
@@ -48,7 +56,18 @@ class StragglerStats:
 
 
 class IndexedDataset:
-    """Record-level access through the byte-offset index."""
+    """Record-level access through the byte-offset index.
+
+    Fetches ride the pipelined extraction engine
+    (:mod:`repro.core.reader`): a step's record set coalesces into merged
+    preads per file, files fan out over ``workers`` threads, and an
+    optional :class:`~repro.core.cache.RecordCache` (``cache=`` or
+    ``cache_records > 0``) serves epoch-loop repeats without re-reading or
+    re-verifying.  Caching is opt-in because a cached record is served
+    as-verified — a corpus mutated underneath the loader would go
+    unnoticed until eviction.  ``workers=0`` falls back to the serial
+    per-record loop.
+    """
 
     def __init__(
         self,
@@ -56,16 +75,31 @@ class IndexedDataset:
         index,  # ByteOffsetIndex | IndexStore (batch read contract)
         seq_len: int,
         verify: bool = True,
+        workers: int = 2,
+        cache: Optional[RecordCache] = None,
+        cache_records: int = 0,
+        coalesce_gap: int = DEFAULT_COALESCE_GAP,
+        span_guess: int = DEFAULT_SPAN_GUESS,
     ):
         self.store = store
         self.index = index
         self.seq_len = seq_len
         self.verify = verify
+        self.workers = workers
+        self.coalesce_gap = coalesce_gap
+        self.span_guess = span_guess
+        self.cache = cache if cache is not None else (
+            RecordCache(capacity=cache_records) if cache_records > 0 else None
+        )
         self.tok = ByteTokenizer()
         # dataset order = sorted index keys (deterministic across hosts;
         # iter_keys is the enumeration every index backend shares)
         self.keys: List[str] = sorted(index.iter_keys())
         self.stats = StragglerStats()
+        self.read_stats = ReadStats()
+        # long-lived worker pool: fetch_many runs every training step, so
+        # per-call pool construction would be pure hot-path overhead
+        self._pool: Optional[ThreadPoolExecutor] = None
 
     def __len__(self) -> int:
         return len(self.keys)
@@ -75,7 +109,14 @@ class IndexedDataset:
         if loc is None:
             raise KeyError(key)
         fname, off = loc
-        return read_record_at(self.store.path_of(fname), off)
+        if self.cache is not None:
+            hit = self.cache.get(fname, off)
+            if hit is not None:
+                return hit[0]
+        text = read_record_at(self.store.path_of(fname), off)
+        if self.cache is not None:
+            self.cache.put(fname, off, text)
+        return text
 
     def fetch_many(self, keys: List[str]) -> Dict[str, str]:
         """Grouped + offset-sorted fetch (Algorithm 3 access pattern).
@@ -83,12 +124,33 @@ class IndexedDataset:
         Planning goes through ONE batched index lookup (``plan_extraction``
         → ``locate_batch``), so a step's whole fetch set is digested,
         Bloom-filtered, and probed together when the index is a sharded
-        ``IndexStore``.
+        ``IndexStore``; the read phase then streams through the pipelined
+        engine (coalesced preads, parallel file workers, cached records).
         """
         plan, missing = plan_extraction(self.index, keys)
         if missing:
             raise KeyError(f"{len(missing)} keys missing from index")
         out: Dict[str, str] = {}
+        if self.workers > 0:
+            if self.workers > 1 and self._pool is None:
+                self._pool = ThreadPoolExecutor(max_workers=self.workers)
+            for ev in stream_plan(
+                self.store,
+                plan,
+                verify=self.verify,
+                workers=self.workers,
+                coalesce_gap=self.coalesce_gap,
+                span_guess=self.span_guess,
+                cache=self.cache,
+                stats=self.read_stats,
+                executor=self._pool,
+            ):
+                self.stats.fetches += 1
+                if ev.ok:
+                    out[ev.full_id] = ev.text
+                else:
+                    self.stats.verify_failures += 1
+            return out
         for fname, items in plan.items():
             path = self.store.path_of(fname)
             with open(path, "rb") as fh:

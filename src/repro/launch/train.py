@@ -79,9 +79,13 @@ def main():
     # Trainer.run enters the mesh context itself (sharding rules active
     # while the step function traces).
     final, _, hist = tr.run(on_step=log)
-    print(f"done: {final} steps, loss {hist[0]['loss']:.4f} → "
-          f"{hist[-1]['loss']:.4f}, checkpoints at "
-          f"{tr.ckpt.root} (latest {tr.ckpt.latest_step()})")
+    if hist:
+        print(f"done: {final} steps, loss {hist[0]['loss']:.4f} → "
+              f"{hist[-1]['loss']:.4f}, checkpoints at "
+              f"{tr.ckpt.root} (latest {tr.ckpt.latest_step()})")
+    else:  # resumed at or past --steps: nothing left to train
+        print(f"done: already at step {final} (restored checkpoint), "
+              f"checkpoints at {tr.ckpt.root} (latest {tr.ckpt.latest_step()})")
 
 
 if __name__ == "__main__":

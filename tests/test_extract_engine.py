@@ -1,0 +1,407 @@
+"""Pipelined extraction engine tests: serial/parallel parity, span
+coalescing, span-boundary records, the record cache, and the streaming
+``extract_iter`` API.
+"""
+
+import tempfile
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    ExtractionResult,
+    RecordCache,
+    RecordStore,
+    build_index,
+    coalesce_spans,
+    compare_ids_batch,
+    extract,
+    extract_iter,
+    intersect_host,
+)
+from repro.core.reader import DEFAULT_SPAN_GUESS
+from repro.core.sdfgen import CorpusSpec, db_id_list, generate_corpus
+
+# Collision-seeded: 1500 records hashed into a 16-bit key space gives
+# E[collisions] ≈ 1500² / 2^17 ≈ 17, so the mismatch path is exercised.
+KEY_BITS = 16
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    spec = CorpusSpec(n_files=3, records_per_file=500, key_bits=KEY_BITS)
+    root = Path(tempfile.mkdtemp()) / "corpus"
+    generate_corpus(root, spec)
+    return RecordStore(root), spec
+
+
+@pytest.fixture(scope="module")
+def targets(corpus):
+    _, spec = corpus
+    # extra_outside seeds the missing path (ids absent from the corpus)
+    return intersect_host(
+        db_id_list(spec, "chembl", extra_outside=15),
+        db_id_list(spec, "emolecules", extra_outside=15),
+    ).ids
+
+
+def _assert_identical(a: ExtractionResult, b: ExtractionResult):
+    """Byte-identical output: records (content AND order), missing, mismatches."""
+    assert list(a.records.items()) == list(b.records.items())
+    assert a.missing == b.missing
+    assert a.mismatches == b.mismatches
+
+
+# ---------------------------------------------------------------------------
+# serial vs pipelined parity
+# ---------------------------------------------------------------------------
+
+def test_parity_full_id_index(corpus, targets):
+    store, _ = corpus
+    idx = build_index(store, key_mode="full_id")
+    serial = extract(store, idx, targets, workers=0)
+    piped = extract(store, idx, targets, workers=4)
+    assert serial.found > 0 and len(serial.missing) > 0  # both paths exercised
+    _assert_identical(serial, piped)
+    assert piped.spans_read > 0
+    assert piped.seeks == serial.seeks
+
+
+def test_parity_collision_seeded_hashed_index(corpus, targets):
+    """Mismatch + missing paths: hashed collisions fetch structurally
+    different molecules; both read paths must report them identically."""
+    store, _ = corpus
+    idx = build_index(store, key_mode="hashed_key", key_bits=KEY_BITS)
+    assert idx.stats.n_duplicate_keys > 0  # collisions actually seeded
+    serial = extract(store, idx, targets, key_bits=KEY_BITS, workers=0)
+    piped = extract(store, idx, targets, key_bits=KEY_BITS, workers=4)
+    # the deterministic corpus seeds real mismatches AND real misses here
+    assert len(serial.mismatches) > 0 and len(serial.missing) > 0
+    _assert_identical(serial, piped)
+
+
+def test_parity_with_cache_and_warm_rerun(corpus, targets):
+    store, _ = corpus
+    idx = build_index(store, key_mode="full_id")
+    serial = extract(store, idx, targets, workers=0)
+    cache = RecordCache(capacity=4096)
+    cold = extract(store, idx, targets, workers=4, cache=cache)
+    warm = extract(store, idx, targets, workers=4, cache=cache)
+    _assert_identical(serial, cold)
+    _assert_identical(serial, warm)
+    assert cold.cache_hits == 0
+    assert warm.cache_hits == warm.seeks      # fully warm
+    assert warm.spans_read == 0               # no I/O at all
+    assert warm.files_opened == 0
+
+
+def test_parity_single_worker_and_unsorted(corpus, targets):
+    store, _ = corpus
+    idx = build_index(store, key_mode="full_id")
+    serial = extract(store, idx, targets, workers=0)
+    one = extract(store, idx, targets, workers=1)
+    # sort_offsets=False is an access-pattern ablation: it must take the
+    # serial loop (the engine has no unsorted mode) and still agree
+    unsorted_ = extract(store, idx, targets, workers=4, sort_offsets=False)
+    _assert_identical(serial, one)
+    _assert_identical(serial, unsorted_)
+    assert unsorted_.spans_read == 0  # engine did not run
+
+
+def test_verify_backends_agree(corpus, targets):
+    store, _ = corpus
+    idx = build_index(store, key_mode="hashed_key", key_bits=KEY_BITS)
+    s = extract(store, idx, targets, key_bits=KEY_BITS, workers=2,
+                verify_backend="string")
+    d = extract(store, idx, targets, key_bits=KEY_BITS, workers=2,
+                verify_backend="digest")
+    _assert_identical(s, d)
+
+
+def test_compare_ids_batch_digest_fallback():
+    exp = ["InChI=1S/a", "InChI=1S/b", "InChI=1S/c"]
+    rec = ["InChI=1S/a", "InChI=1S/DIFFERENT", "InChI=1S/c"]
+    assert compare_ids_batch(exp, rec, backend="digest") == [True, False, True]
+    assert compare_ids_batch(exp, rec, backend="string") == [True, False, True]
+    assert compare_ids_batch([], [], backend="digest") == []
+    with pytest.raises(ValueError):
+        compare_ids_batch(exp, rec, backend="nope")
+
+
+# ---------------------------------------------------------------------------
+# phase-timing split
+# ---------------------------------------------------------------------------
+
+def test_seconds_split_into_plan_and_read(corpus, targets):
+    store, _ = corpus
+    idx = build_index(store, key_mode="full_id")
+    res = extract(store, idx, targets)
+    assert res.plan_seconds > 0 and res.read_seconds > 0
+    assert res.seconds == res.plan_seconds + res.read_seconds
+
+
+# ---------------------------------------------------------------------------
+# span coalescing
+# ---------------------------------------------------------------------------
+
+def test_coalesce_merges_within_gap_threshold():
+    guess, gap = 100, 50
+    # second offset exactly at provisional_end + gap: still merges (<=)
+    spans = coalesce_spans([(0, 0), (1, guess + gap)], gap=gap, guess=guess)
+    assert len(spans) == 1
+    assert spans[0].start == 0 and spans[0].end == guess + gap + guess
+    # one byte past the threshold: splits
+    spans = coalesce_spans([(0, 0), (1, guess + gap + 1)], gap=gap, guess=guess)
+    assert len(spans) == 2
+    assert [s.start for s in spans] == [0, guess + gap + 1]
+
+
+def test_coalesce_max_span_bounds_merged_reads():
+    """Dense targets within the gap still split once the merged span would
+    exceed max_span — bounds per-worker pread buffers on huge files."""
+    offsets = [(i, i * 100) for i in range(100)]
+    merged = coalesce_spans(offsets, gap=1 << 30, guess=100, max_span=1 << 30)
+    assert len(merged) == 1
+    capped = coalesce_spans(offsets, gap=1 << 30, guess=100, max_span=1000)
+    assert len(capped) > 1
+    assert all(s.end - s.start <= 1000 for s in capped)
+    assert sorted(m[0] for s in capped for m in s.members) == list(range(100))
+    with pytest.raises(ValueError):
+        coalesce_spans(offsets, max_span=0)
+
+
+def test_coalesce_sorts_clamps_and_validates():
+    spans = coalesce_spans([(1, 500), (0, 0)], gap=10_000, guess=100,
+                           file_size=550)
+    assert len(spans) == 1
+    assert spans[0].end == 550                       # clamped to file size
+    assert [m[0] for m in spans[0].members] == [0, 1]  # offset order
+    with pytest.raises(ValueError):
+        coalesce_spans([(0, 0)], gap=-1)
+    with pytest.raises(ValueError):
+        coalesce_spans([(0, 0)], guess=0)
+
+
+def test_gap_knob_controls_spans_read(corpus):
+    """gap=0 keeps sparse targets in separate preads; a huge gap merges a
+    file's whole target set into one span."""
+    store, spec = corpus
+    idx = build_index(store, key_mode="full_id")
+    targets = db_id_list(spec, "chembl")  # every 7th record: sparse-ish
+    tight = extract(store, idx, targets, workers=1, coalesce_gap=0,
+                    span_guess=64)
+    merged = extract(store, idx, targets, workers=1,
+                     coalesce_gap=1 << 30, span_guess=64)
+    _assert_identical(tight, merged)
+    assert merged.files_opened == len(store)
+    # fully merged: one initial span per file (+ tail extensions)
+    assert merged.spans_read < tight.spans_read
+    assert tight.spans_read >= len(targets)  # one span (or more) per record
+
+
+# ---------------------------------------------------------------------------
+# records spanning span boundaries (tail-extension path)
+# ---------------------------------------------------------------------------
+
+def test_records_spanning_span_boundaries(corpus, targets):
+    """A span guess far smaller than a record forces repeated tail
+    extensions; the split must still be byte-identical to the serial scan."""
+    store, _ = corpus
+    idx = build_index(store, key_mode="full_id")
+    serial = extract(store, idx, targets, workers=0)
+    for guess in (1, 7, 64):
+        tiny = extract(store, idx, targets, workers=2, span_guess=guess)
+        _assert_identical(serial, tiny)
+        assert tiny.spans_read > serial.found  # extensions actually happened
+
+
+def test_delimiter_straddling_and_tail_record(tmp_path):
+    """Delimiter split across pread boundaries, $$$$ inside record data, and
+    an unterminated final record all match the serial reader."""
+    from repro.core.records import read_record_at
+
+    path = tmp_path / "t.sdf"
+    rec_a = "line one\ndata $$$$ not a terminator\nlast\n"
+    rec_b = "short\n"
+    rec_c = "unterminated tail record\n"
+    raw = rec_a + "$$$$\n" + rec_b + "$$$$\n" + rec_c
+    path.write_text(raw, encoding="utf-8")
+    offs = [0, len(rec_a) + 5, len(rec_a) + 5 + len(rec_b) + 5]
+
+    from repro.core.reader import ReadStats, stream_plan
+
+    class _OneFileStore:
+        def path_of(self, name):
+            return path
+
+    for guess in range(1, 9):  # every tiny guess slides the pread boundary
+        plan = {"t.sdf": [(f"id{i}", f"id{i}", off) for i, off in enumerate(offs)]}
+        stats = ReadStats()
+        events = list(stream_plan(_OneFileStore(), plan, verify=False,
+                                  workers=1, span_guess=guess,
+                                  coalesce_gap=0, stats=stats))
+        texts = {ev.offset: ev.text for ev in events}
+        for off in offs:
+            assert texts[off] == read_record_at(path, off), (guess, off)
+    assert texts[offs[0]] == rec_a and texts[offs[2]] == rec_c
+
+
+def test_offset_past_eof_degrades_like_serial(corpus):
+    """A bogus offset beyond EOF must produce the serial path's outcome
+    (empty read -> unparseable mismatch), not a crash."""
+    store, _ = corpus
+    from repro.core import ByteOffsetIndex
+
+    fname = store.file_names()[0]
+    idx = ByteOffsetIndex(key_mode="full_id")
+    idx.add("InChI=1S/ghost", fname, 10**9)
+    serial = extract(store, idx, ["InChI=1S/ghost"], workers=0)
+    piped = extract(store, idx, ["InChI=1S/ghost"], workers=2)
+    _assert_identical(serial, piped)
+    assert len(piped.mismatches) == 1
+    assert piped.mismatches[0].found_id == "<unparseable>"
+
+
+def test_bulk_scanner_matches_line_reference(tmp_path):
+    """iter_records/iter_record_offsets (bulk bytes.find scan) must be
+    byte-exact vs the per-line reference on delimiter edge cases, at every
+    chunk boundary."""
+    import random
+
+    import repro.core.records as R
+    from repro.core.records import RECORD_DELIM, iter_record_offsets, iter_records
+
+    def ref_records(path):
+        with open(path, "rb") as f:
+            offset = 0
+            start = 0
+            buf = []
+            for line in f:
+                if line.rstrip(b"\n\r") == RECORD_DELIM:
+                    yield start, b"".join(buf).decode("utf-8", "replace")
+                    offset += len(line)
+                    start = offset
+                    buf = []
+                else:
+                    buf.append(line)
+                    offset += len(line)
+            if buf and any(ln.strip() for ln in buf):
+                yield start, b"".join(buf).decode("utf-8", "replace")
+
+    pieces = [b"", b"\n", b"$$$$\n", b"$$$$", b"$$$$\r\n", b"$$$$\r\r\n",
+              b"x$$$$\n", b"$$$$x\n", b"$$$$$\n", b"abc\n", b"  \n", b"\r\n",
+              b"data $$$$ mid\n", b"$$$$$$$$\n", b"tail-no-newline"]
+    rng = random.Random(7)
+    old_chunk = R._READ_CHUNK
+    try:
+        for chunk in (4, 7, old_chunk):  # tiny chunks slide every boundary
+            R._READ_CHUNK = chunk
+            for trial in range(60):
+                body = b"".join(
+                    rng.choice(pieces) for _ in range(rng.randint(0, 10))
+                )
+                p = tmp_path / f"t_{chunk}_{trial}.sdf"
+                p.write_bytes(body)
+                want = list(ref_records(p))
+                assert list(iter_records(p)) == want, (chunk, body)
+                assert list(iter_record_offsets(p)) == [
+                    s for s, t in want if t.strip()
+                ], (chunk, body)
+    finally:
+        R._READ_CHUNK = old_chunk
+
+
+# ---------------------------------------------------------------------------
+# record cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_miss_eviction_counters():
+    c = RecordCache(capacity=2)
+    assert c.get("f", 0) is None
+    assert c.stats.misses == 1
+    c.put("f", 0, "aaa")
+    c.put("f", 1, "bbb", recomputed_id="id-b")
+    assert c.get("f", 0) == ("aaa", None)
+    assert c.get("f", 1) == ("bbb", "id-b")
+    assert c.stats.hits == 2
+    c.put("f", 2, "ccc")                 # evicts LRU
+    assert c.stats.evictions == 1
+    assert len(c) == 2
+    # offset 0 was most-recently-used before the insert of 2 evicted... the
+    # LRU order after the two gets is [0, 1]; inserting 2 evicts 0
+    assert c.get("f", 0) is None
+    assert c.get("f", 1) is not None and c.get("f", 2) is not None
+    assert 0 < c.hit_rate < 1
+
+
+def test_cache_refresh_keeps_verified_id_and_bounds_bytes():
+    c = RecordCache(capacity=10, max_bytes=10)
+    c.put("f", 0, "abcde", recomputed_id="id-a")
+    c.put("f", 0, "abcde")               # refresh without id: id preserved
+    assert c.get("f", 0) == ("abcde", "id-a")
+    c.put("f", 1, "fghij")
+    c.put("f", 2, "klmno")               # 15 bytes total > 10: evicts
+    assert c.cached_bytes <= 10
+    assert c.stats.evictions >= 1
+    c.clear()
+    assert len(c) == 0 and c.cached_bytes == 0
+    with pytest.raises(ValueError):
+        RecordCache(capacity=0)
+
+
+def test_cache_skips_reparse_on_warm_verify(corpus, targets):
+    """A warm verified hit is served without recompute: corrupting the file
+    under a warm cache goes unnoticed (the documented staleness trade-off),
+    proving no re-read/re-parse happened."""
+    store, _ = corpus
+    idx = build_index(store, key_mode="full_id")
+    cache = RecordCache(capacity=4096)
+    extract(store, idx, targets, workers=2, cache=cache)
+    victim = store.files()[0]
+    backup = victim.read_bytes()
+    victim.write_bytes(b"GARBAGE " * 100)
+    try:
+        warm = extract(store, idx, targets, workers=2, cache=cache)
+        assert not warm.mismatches and warm.spans_read == 0
+    finally:
+        victim.write_bytes(backup)
+
+
+# ---------------------------------------------------------------------------
+# streaming API
+# ---------------------------------------------------------------------------
+
+def test_extract_iter_streams_verified_records(corpus, targets):
+    store, _ = corpus
+    idx = build_index(store, key_mode="hashed_key", key_bits=KEY_BITS)
+    ref = extract(store, idx, targets, key_bits=KEY_BITS, workers=0)
+    res = ExtractionResult()
+    got = {}
+    for full_id, text in extract_iter(store, idx, targets,
+                                      key_bits=KEY_BITS, workers=3,
+                                      result=res):
+        got[full_id] = text
+    assert got == ref.records
+    assert res.missing == ref.missing
+    assert res.mismatches == ref.mismatches
+    assert res.seeks == ref.seeks
+    assert res.records == {}  # the stream is the record channel
+
+
+def test_extract_iter_abandoned_early_does_not_block(corpus, targets):
+    """Breaking out of the stream must not stall on in-flight file workers
+    (the pool drops queued files instead of joining everything)."""
+    import time
+
+    store, _ = corpus
+    idx = build_index(store, key_mode="full_id")
+    it = extract_iter(store, idx, targets, workers=4)
+    first = next(it)
+    t0 = time.perf_counter()
+    it.close()
+    assert time.perf_counter() - t0 < 5.0
+    assert isinstance(first, tuple) and len(first) == 2
+    # the engine stays fully usable afterwards
+    ref = extract(store, idx, targets, workers=0)
+    again = dict(extract_iter(store, idx, targets, workers=4))
+    assert again == ref.records

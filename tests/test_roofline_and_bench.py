@@ -81,14 +81,19 @@ def test_probe_cfg_scales_stacks():
 
 
 @pytest.mark.slow
-def test_benchmark_harness_smoke():
-    """benchmarks.run completes on a tiny corpus and emits CSV rows."""
+def test_benchmark_harness_smoke(tmp_path):
+    """benchmarks.run completes on a tiny corpus, emits CSV rows, and
+    writes the machine-readable BENCH_extract.json metrics."""
+    import json
+
+    extract_json = tmp_path / "BENCH_extract.json"
     env = dict(os.environ)
     env.update(
         PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"),
         REPRO_BENCH_FILES="2",
         REPRO_BENCH_RPF="250",
         REPRO_BENCH_CACHE=str(Path(__file__).resolve().parents[1] / ".bench_cache_test"),
+        REPRO_BENCH_EXTRACT_OUT=str(extract_json),
     )
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.run"],
@@ -100,8 +105,13 @@ def test_benchmark_harness_smoke():
     assert lines[0] == "name,us_per_call,derived"
     names = {l.split(",")[0] for l in lines[1:]}
     for expected in ("table1.mean", "table2.measured_speedup",
+                     "table2.serial_read_ablation",
                      "table3.disk_io_volume", "table4.full_id",
                      "eq45.migration_full_id", "fig2.crossover",
-                     "kernels.hash_mix"):
+                     "extract.pipelined_warm", "kernels.hash_mix"):
         assert expected in names, f"missing {expected}"
     assert not any(".ERROR" in n for n in names)
+    metrics = json.loads(extract_json.read_text())
+    assert metrics["parity"] is True
+    assert metrics["pipelined_warm"]["cache_hit_rate"] > 0
+    assert metrics["speedup_warm"] > 0
