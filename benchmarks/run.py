@@ -9,15 +9,18 @@ Prints ``name,us_per_call,derived`` CSV rows (harness convention) covering:
   Eq. 4/5   — collision counts vs birthday bound + §VI discovery/migration
   Fig. 2    — runtime scaling and baseline/index crossover
   extract   — serial vs pipelined extraction engine (+ record cache)
+  service   — continuous-batching query service vs per-key probing
   kernels   — TPU-adapted hot-loop throughput (hash_mix, sorted_probe)
 
 Corpus scale via REPRO_BENCH_FILES / REPRO_BENCH_RPF env vars.
 Roofline numbers come from the dry-run (results/dryrun.jsonl), not here.
 
-The extraction-engine module additionally emits machine-readable metrics
-to ``BENCH_extract.json`` at the repo root (override the path with
-``REPRO_BENCH_EXTRACT_OUT``) so records/sec, spans/record, cache hit rate
-and the serial→pipelined speedup are tracked across PRs.
+The extraction-engine and service modules additionally emit
+machine-readable metrics to ``BENCH_extract.json`` / ``BENCH_service.json``
+at the repo root (override with ``REPRO_BENCH_EXTRACT_OUT`` /
+``REPRO_BENCH_SERVICE_OUT``) so records/sec, cache hit rate, sustained
+lookups/sec, p50/p99 latency, and the coalescing speedups are tracked
+across PRs.
 """
 
 from __future__ import annotations
@@ -29,13 +32,13 @@ import time
 from pathlib import Path
 
 
-def _write_extract_metrics(metrics) -> None:
+def _write_metrics(metrics, env_var: str, default_name: str, tag: str) -> None:
     if not metrics:
         return
-    out = os.environ.get("REPRO_BENCH_EXTRACT_OUT")
-    path = Path(out) if out else Path(__file__).resolve().parents[1] / "BENCH_extract.json"
+    out = os.environ.get(env_var)
+    path = Path(out) if out else Path(__file__).resolve().parents[1] / default_name
     path.write_text(json.dumps(metrics, indent=1, sort_keys=True) + "\n")
-    print(f"extract.metrics_written,0,{path}", flush=True)
+    print(f"{tag}.metrics_written,0,{path}", flush=True)
 
 
 def main() -> None:
@@ -44,6 +47,7 @@ def main() -> None:
         extract_engine,
         fig2_scaling,
         kernels_tpu,
+        service_load,
         table1_scan,
         table2_speedup,
         table3_resources,
@@ -58,6 +62,7 @@ def main() -> None:
         ("eq45", collisions_eq45),
         ("fig2", fig2_scaling),
         ("extract", extract_engine),
+        ("service", service_load),
         ("kernels", kernels_tpu),
     ]
     print("name,us_per_call,derived")
@@ -74,7 +79,10 @@ def main() -> None:
             f"{name}.total,{(time.perf_counter()-t0)*1e6:.0f},",
             flush=True,
         )
-    _write_extract_metrics(extract_engine.last_metrics())
+    _write_metrics(extract_engine.last_metrics(),
+                   "REPRO_BENCH_EXTRACT_OUT", "BENCH_extract.json", "extract")
+    _write_metrics(service_load.last_metrics(),
+                   "REPRO_BENCH_SERVICE_OUT", "BENCH_service.json", "service")
     if failures:
         sys.exit(1)
 

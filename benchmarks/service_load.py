@@ -1,0 +1,186 @@
+"""Query-service load benchmark — continuous batching vs per-key probing.
+
+Closed-loop clients (>= 8, each one outstanding request at a time) drive
+two architectures over the same published sharded store:
+
+* ``service.naive``   — each client serves its request with per-request
+  ``lookup_batch`` calls at batch size 1 (the pre-service per-key
+  contract: one probe per key, no cross-caller coalescing);
+* ``service.batched`` — each client submits to the ``QueryService``,
+  whose continuous micro-batching scheduler re-coalesces the concurrent
+  cohort into the big batched probes the ``IndexStore`` is built for.
+
+Both paths are measured with multi-key requests (the shape of a real
+integration query — a handful of related records per request) AND with
+single-key requests (``single_key`` rows), where every coalescing gain
+must come from cross-client batching alone.
+
+Byte-identical record parity of the service's ``fetch`` against the
+direct serial ``extract`` reference is asserted before any throughput is
+reported, and a warm second fetch measures the shared scan-resistant
+record cache.  ``benchmarks/run.py`` writes :func:`last_metrics` to
+``BENCH_service.json``.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.core import IndexStore, build_index, extract
+from repro.core.index import ByteOffsetIndex
+from repro.core.intersect import intersect_host
+from repro.core.sdfgen import db_id_list
+from repro.service import QueryService, ServiceConfig, run_closed_loop
+
+from .common import CACHE, bench_store, row
+
+CLIENTS = int(os.environ.get("REPRO_BENCH_SERVICE_CLIENTS", "8"))
+KEYS_PER_REQUEST = 4
+DURATION_S = float(os.environ.get("REPRO_BENCH_SERVICE_SECONDS", "1.2"))
+N_SHARDS = 16
+REPLICAS = 2
+
+_LAST: Optional[Dict[str, object]] = None
+
+
+def last_metrics() -> Optional[Dict[str, object]]:
+    """Metrics of the most recent :func:`run` (for BENCH_service.json)."""
+    return _LAST
+
+
+def _report(rep) -> Dict[str, float]:
+    return {
+        "clients": rep.clients,
+        "requests": rep.requests,
+        "lookups_per_sec": rep.lookups_per_sec,
+        "p50_ms": rep.p50_ms,
+        "p99_ms": rep.p99_ms,
+        "errors": rep.errors,
+    }
+
+
+def run() -> List[str]:
+    global _LAST
+    store, spec = bench_store()
+    out = []
+
+    idx = build_index(store, key_mode="full_id")
+    store_dir = CACHE / (
+        f"store_{spec.n_files}x{spec.records_per_file}_{N_SHARDS}"
+    )
+    idx.save_sharded(store_dir, n_shards=N_SHARDS)
+    keys = sorted(idx.entries.keys())
+
+    targets = intersect_host(
+        db_id_list(spec, "chembl", extra_outside=25),
+        db_id_list(spec, "emolecules", extra_outside=25),
+    ).ids
+
+    svc = QueryService(
+        store, store_dir, ServiceConfig(replicas=REPLICAS, max_batch=512)
+    )
+
+    # -- parity gate: fetch through the whole service stack vs serial ------
+    serial = extract(store, idx, targets, workers=0)
+    res = svc.fetch(targets)
+    parity = (
+        list(res.records.items()) == list(serial.records.items())
+        and res.missing == serial.missing
+        and res.mismatches == serial.mismatches
+    )
+    out.append(row(
+        "service.fetch_parity", 0.0,
+        f"{res.found} records byte-identical={'ok' if parity else 'BROKEN'}"))
+    warm = svc.fetch(targets)
+    cache_hit_rate = warm.cache_hits / max(warm.seeks, 1)
+    parity = parity and list(warm.records.items()) == list(serial.records.items())
+
+    # -- naive baseline: per-request lookup_batch at batch size 1 ----------
+    naive_store = IndexStore.open(store_dir)
+    naive_store.lookup_batch(keys[: min(2000, len(keys))])  # warm mmaps
+
+    def naive(ks):
+        for k in ks:
+            naive_store.lookup_batch([k])
+
+    rep_naive = run_closed_loop(
+        naive, keys, clients=CLIENTS, duration_s=DURATION_S,
+        keys_per_request=KEYS_PER_REQUEST,
+    )
+    out.append(row(
+        "service.naive", rep_naive.seconds,
+        f"{rep_naive.lookups_per_sec:.0f} lookups/s, {CLIENTS} clients x "
+        f"{KEYS_PER_REQUEST} keys/req, p50 {rep_naive.p50_ms:.2f} ms, "
+        f"p99 {rep_naive.p99_ms:.2f} ms"))
+
+    # -- service path: continuous micro-batching ---------------------------
+    svc.lookup_batch(keys[: min(2000, len(keys))])  # warm the scheduler
+    rep_svc = run_closed_loop(
+        lambda ks: svc.lookup_batch(ks), keys, clients=CLIENTS,
+        duration_s=DURATION_S, keys_per_request=KEYS_PER_REQUEST,
+    )
+    speedup = rep_svc.lookups_per_sec / max(rep_naive.lookups_per_sec, 1e-9)
+    sch = svc.stats()["scheduler"]
+    out.append(row(
+        "service.batched", rep_svc.seconds,
+        f"{rep_svc.lookups_per_sec:.0f} lookups/s ({speedup:.1f}x naive), "
+        f"mean batch {sch['mean_batch_keys']:.1f} keys, "
+        f"{sch['coalesced_batches']} coalesced batches, "
+        f"p50 {rep_svc.p50_ms:.2f} ms, p99 {rep_svc.p99_ms:.2f} ms"))
+
+    # -- single-key ablation: coalescing across clients only ---------------
+    rep_naive1 = run_closed_loop(
+        naive, keys, clients=CLIENTS, duration_s=DURATION_S / 2,
+        keys_per_request=1,
+    )
+    rep_svc1 = run_closed_loop(
+        lambda ks: svc.lookup_batch(ks), keys, clients=CLIENTS,
+        duration_s=DURATION_S / 2, keys_per_request=1,
+    )
+    speedup1 = rep_svc1.lookups_per_sec / max(rep_naive1.lookups_per_sec, 1e-9)
+    out.append(row(
+        "service.single_key", rep_svc1.seconds,
+        f"svc {rep_svc1.lookups_per_sec:.0f} vs naive "
+        f"{rep_naive1.lookups_per_sec:.0f} lookups/s ({speedup1:.1f}x) at "
+        f"1 key/request"))
+
+    stats = svc.stats()
+    sch = stats["scheduler"]
+    _LAST = {
+        "corpus": {
+            "files": spec.n_files,
+            "records_per_file": spec.records_per_file,
+            "entries": len(keys),
+            "n_shards": N_SHARDS,
+        },
+        "config": {
+            "clients": CLIENTS,
+            "keys_per_request": KEYS_PER_REQUEST,
+            "replicas": REPLICAS,
+            "max_batch": 512,
+            "max_wait_ms": ServiceConfig().max_wait_ms,
+            "duration_s": DURATION_S,
+        },
+        "naive": _report(rep_naive),
+        "service": _report(rep_svc),
+        "speedup_vs_naive": speedup,
+        "single_key": {
+            "naive": _report(rep_naive1),
+            "service": _report(rep_svc1),
+            "speedup_vs_naive": speedup1,
+        },
+        "mean_coalesced_batch": sch["mean_batch_keys"],
+        "coalesced_batches": sch["coalesced_batches"],
+        "flushes": {
+            k: sch[k]
+            for k in ("full_flushes", "cohort_flushes", "deadline_flushes",
+                      "immediate_flushes")
+        },
+        "cache_hit_rate": cache_hit_rate,
+        "bloom_rejects": stats["store"]["bloom_rejects"],
+        "parity": bool(parity),
+    }
+    svc.close()
+    return out

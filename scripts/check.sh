@@ -4,9 +4,12 @@
 # interpreter, so kernel regressions surface even on CPU-only machines),
 # a sharded-store round trip (build → save_sharded → reopen → lookup_batch),
 # a pipelined-extraction smoke (parallel engine vs serial loop parity on a
-# collision-seeded corpus), and a smoke-scale pass of the full benchmark
-# harness — which must also produce the BENCH_extract.json metrics file —
-# so the bench modules can't silently rot.
+# collision-seeded corpus), a query-service smoke (concurrent clients
+# through the micro-batching scheduler: byte parity vs the serial
+# reference + a nonzero coalesced-batch count), and a smoke-scale pass of
+# the full benchmark harness — which must also produce the
+# BENCH_extract.json and BENCH_service.json metrics files — so the bench
+# modules can't silently rot.
 #
 # Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
@@ -100,16 +103,70 @@ print(f"extraction engine OK: {serial.found} records, "
       f"{warm.cache_hits} cache hits warm")
 PY
 
+echo "== service smoke: concurrent clients vs serial parity =="
+python - <<'PY'
+import tempfile, threading
+from pathlib import Path
+from repro.core import RecordStore, build_index, extract, intersect_host
+from repro.core.sdfgen import CorpusSpec, db_id_list, generate_corpus
+from repro.service import QueryService, ServiceConfig
+
+# collision-seeded corpus: the service must reproduce the serial loop's
+# records AND its mismatches byte-for-byte
+spec = CorpusSpec(n_files=3, records_per_file=500, key_bits=16)
+root = Path(tempfile.mkdtemp()) / "c"
+generate_corpus(root, spec)
+store = RecordStore(root)
+targets = intersect_host(
+    db_id_list(spec, "chembl", extra_outside=10),
+    db_id_list(spec, "emolecules", extra_outside=10),
+).ids
+idx = build_index(store, key_mode="hashed_key", key_bits=16)
+sdir = root.parent / "istore"
+idx.save_sharded(sdir, n_shards=8)
+serial = extract(store, idx, targets, key_bits=16, workers=0)
+assert serial.mismatches, "smoke corpus no longer seeds collisions"
+
+with QueryService(store, sdir, ServiceConfig(replicas=2)) as svc:
+    outs = {}
+    def client(i):
+        outs[i] = svc.fetch(targets, key_bits=16)
+    ths = [threading.Thread(target=client, args=(i,)) for i in range(6)]
+    for t in ths: t.start()
+    for t in ths: t.join()
+    for res in outs.values():
+        assert list(res.records.items()) == list(serial.records.items())
+        assert res.missing == serial.missing
+        assert res.mismatches == serial.mismatches
+    # concurrent single-key lookups must coalesce into shared probes
+    lk = [k for k in idx.entries][:400]
+    def looker(i):
+        for j in range(i, len(lk), 6):
+            svc.lookup_batch(lk[j:j+2])
+    ths = [threading.Thread(target=looker, args=(i,)) for i in range(6)]
+    for t in ths: t.start()
+    for t in ths: t.join()
+    sch = svc.stats()["scheduler"]
+    assert sch["coalesced_batches"] > 0, "no request coalescing happened"
+    print(f"query service OK: {len(outs)} concurrent fetches byte-identical "
+          f"({len(serial.mismatches)} collision mismatches reproduced), "
+          f"{sch['coalesced_batches']} coalesced batches "
+          f"(mean {sch['mean_batch_keys']:.1f} keys)")
+PY
+
 echo "== bench smoke: full harness at smoke scale =="
 BENCH_OUT=$(mktemp)
 BENCH_JSON=$(mktemp -u)
+BENCH_SVC_JSON=$(mktemp -u)
 if ! REPRO_BENCH_FILES=2 REPRO_BENCH_RPF=250 \
      REPRO_BENCH_CACHE="${TMPDIR:-/tmp}/repro_bench_smoke" \
      REPRO_BENCH_EXTRACT_OUT="$BENCH_JSON" \
+     REPRO_BENCH_SERVICE_OUT="$BENCH_SVC_JSON" \
+     REPRO_BENCH_SERVICE_SECONDS=0.4 \
      python -m benchmarks.run > "$BENCH_OUT"; then
   echo "benchmark harness failed:"
   grep '\.ERROR,' "$BENCH_OUT" || tail -5 "$BENCH_OUT"
-  rm -f "$BENCH_OUT" "$BENCH_JSON"
+  rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON"
   exit 1
 fi
 echo "bench harness OK: $(wc -l < "$BENCH_OUT") CSV rows"
@@ -124,6 +181,19 @@ assert m["parity"] is True, "serial vs pipelined output diverged"
 print(f"BENCH_extract.json OK: warm speedup {m['speedup_warm']:.1f}x, "
       f"cache hit rate {m['pipelined_warm']['cache_hit_rate']:.0%}")
 PY
-rm -f "$BENCH_OUT" "$BENCH_JSON"
+test -s "$BENCH_SVC_JSON" || { echo "BENCH_service.json not produced"; exit 1; }
+python - "$BENCH_SVC_JSON" <<'PY'
+import json, sys
+m = json.load(open(sys.argv[1]))
+for key in ("naive", "service", "speedup_vs_naive", "mean_coalesced_batch",
+            "coalesced_batches", "cache_hit_rate", "parity"):
+    assert key in m, f"BENCH_service.json missing {key!r}"
+assert m["parity"] is True, "service fetch diverged from serial extract"
+assert m["coalesced_batches"] > 0, "no coalesced batches at smoke scale"
+print(f"BENCH_service.json OK: {m['service']['lookups_per_sec']:.0f} "
+      f"lookups/s ({m['speedup_vs_naive']:.1f}x naive), mean batch "
+      f"{m['mean_coalesced_batch']:.1f} keys")
+PY
+rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON"
 
 echo "== all checks passed =="

@@ -109,21 +109,23 @@ class BloomFilter:
     # -- queries ------------------------------------------------------------
 
     def contains(self, digests: np.ndarray) -> np.ndarray:
-        """Vectorized membership: bool mask, no false negatives."""
+        """Vectorized membership: bool mask, no false negatives.
+
+        All ``k`` probe positions are materialized as one ``(k, n)`` grid and
+        tested in a single numpy pass: for the small batches a query service
+        coalesces (a handful of keys per shard), ``k`` sequential
+        length-``n`` passes were dominated by per-op dispatch overhead, not
+        by the probes themselves.
+        """
         d = np.asarray(digests, dtype=np.uint64)
-        out = np.ones(d.shape[0], dtype=bool)
         if d.shape[0] == 0:
-            return out
+            return np.ones(0, dtype=bool)
         h2 = _mix64(d) | np.uint64(1)
-        mask = np.uint64(self.m - 1)
-        for i in range(self.k):
-            pos = (d + np.uint64(i) * h2) & mask
-            byte = self.bits[(pos >> np.uint64(3)).astype(np.int64)]
-            bit = (byte >> (pos & np.uint64(7)).astype(np.uint8)) & np.uint8(1)
-            out &= bit.astype(bool)
-            if not out.any():
-                break
-        return out
+        i = np.arange(self.k, dtype=np.uint64)[:, None]
+        pos = (d[None, :] + i * h2[None, :]) & np.uint64(self.m - 1)
+        byte = self.bits[(pos >> np.uint64(3)).astype(np.int64)]
+        bit = (byte >> (pos & np.uint64(7)).astype(np.uint8)) & np.uint8(1)
+        return bit.all(axis=0)
 
     # -- diagnostics --------------------------------------------------------
 

@@ -47,6 +47,7 @@ from .records import RecordStore, read_record_at
 __all__ = [
     "ExtractionResult",
     "Mismatch",
+    "assemble_plan",
     "extract",
     "extract_iter",
     "plan_extraction",
@@ -109,8 +110,6 @@ def plan_extraction(
     digest of the target id — exactly the paper's pipeline before the §VI.C
     migration.
     """
-    plan: Dict[str, List[Tuple[str, str, int]]] = {}
-    missing: List[str] = []
     hashed = getattr(index, "key_mode", "full_id") == "hashed_key"
     keys = [
         hashed_key(t, key_bits) if hashed else t for t in targets
@@ -120,6 +119,23 @@ def plan_extraction(
         locs = locate(keys)
     else:  # minimal backends: fall back to per-key lookups
         locs = [index.lookup(k) for k in keys]
+    return assemble_plan(targets, keys, locs, sort_offsets)
+
+
+def assemble_plan(
+    targets: Sequence[str],
+    keys: Sequence[str],
+    locs: Sequence[Optional[Tuple[str, int]]],
+    sort_offsets: bool = True,
+) -> Tuple[Dict[str, List[Tuple[str, str, int]]], List[str]]:
+    """Group resolved locations into the per-file extraction plan.
+
+    Shared by :func:`plan_extraction` (direct index backends) and the
+    query service's scheduler-coalesced plan path — one definition of the
+    plan shape, two ways of resolving locations.
+    """
+    plan: Dict[str, List[Tuple[str, str, int]]] = {}
+    missing: List[str] = []
     for full_id, key, loc in zip(targets, keys, locs):
         if loc is None:
             missing.append(full_id)
@@ -145,6 +161,7 @@ def extract(
     span_guess: int = DEFAULT_SPAN_GUESS,
     cache: Optional[RecordCache] = None,
     verify_backend: str = "auto",
+    service=None,  # repro.service.QueryService — scheduler-coalesced plan path
 ) -> ExtractionResult:
     """Algorithm 3: seek-extract every target through the index.
 
@@ -159,6 +176,12 @@ def extract(
     ``cache`` (a :class:`~repro.core.cache.RecordCache`) serves repeat
     fetches without re-reading — see :mod:`repro.core.reader`.
 
+    ``service`` (a :class:`repro.service.QueryService`) replaces the
+    direct ``index`` probe with the service's scheduler-coalesced lookup
+    path — concurrent extractions then share probe batches, the service's
+    record cache (unless ``cache`` overrides it), and its long-lived read
+    pool; ``index`` may be ``None``.  Output is byte-identical either way.
+
     The access-pattern ablations always take the serial loop, because the
     engine has no unsorted/ungrouped mode (it coalesces in offset order by
     construction): ``group_by_file=False`` is one open per target, and
@@ -166,7 +189,17 @@ def extract(
     """
     t0 = time.perf_counter()
     res = ExtractionResult()
-    plan, missing = plan_extraction(index, targets, key_bits, sort_offsets)
+    executor = None
+    if service is not None:
+        plan, missing = service.plan(targets, key_bits=key_bits,
+                                     sort_offsets=sort_offsets)
+        if cache is None:
+            cache = service.cache
+        executor = service.read_executor
+        if workers is None:
+            workers = service.config.read_workers
+    else:
+        plan, missing = plan_extraction(index, targets, key_bits, sort_offsets)
     res.missing = missing
     res.plan_seconds = time.perf_counter() - t0
 
@@ -190,6 +223,7 @@ def extract(
             cache=cache,
             verify_backend=verify_backend,
             stats=stats,
+            executor=executor,
         ):
             res.seeks += 1
             if ev.ok:
@@ -258,6 +292,7 @@ def extract_iter(
     cache: Optional[RecordCache] = None,
     verify_backend: str = "auto",
     result: Optional[ExtractionResult] = None,
+    service=None,  # repro.service.QueryService — scheduler-coalesced plan path
 ) -> Iterator[Tuple[str, str]]:
     """Streaming Algorithm 3: yield ``(full_id, record)`` as verified.
 
@@ -273,9 +308,22 @@ def extract_iter(
     :func:`extract` for the serial ablation, whose access-pattern knobs —
     ``sort_offsets``/``group_by_file`` — do not apply here: the engine
     always reads each file's targets in coalesced offset order).
+
+    ``service`` routes the plan probe through the query service's
+    scheduler and defaults ``cache`` to the service's shared record cache,
+    exactly as in :func:`extract`; ``index`` may then be ``None``.
     """
     t0 = time.perf_counter()
-    plan, missing = plan_extraction(index, targets, key_bits)
+    executor = None
+    if service is not None:
+        plan, missing = service.plan(targets, key_bits=key_bits)
+        if cache is None:
+            cache = service.cache
+        executor = service.read_executor
+        if workers is None:
+            workers = service.config.read_workers
+    else:
+        plan, missing = plan_extraction(index, targets, key_bits)
     if result is not None:
         result.missing = missing
         result.plan_seconds = time.perf_counter() - t0
@@ -295,6 +343,7 @@ def extract_iter(
             cache=cache,
             verify_backend=verify_backend,
             stats=stats,
+            executor=executor,
         ):
             if result is not None:
                 result.seeks += 1

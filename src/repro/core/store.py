@@ -41,6 +41,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import threading
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
@@ -299,6 +300,16 @@ class QueryStats:
     verify_collisions: int = 0      # equal digest, different key (scanned past)
     shards_touched: Set[int] = field(default_factory=set)
 
+    def merge(self, other: "QueryStats") -> None:
+        """Fold ``other`` in (router replica aggregation, stats flushes)."""
+        self.queries += other.queries
+        self.hits += other.hits
+        self.bloom_rejects += other.bloom_rejects
+        self.bloom_false_positives += other.bloom_false_positives
+        self.digest_probes += other.digest_probes
+        self.verify_collisions += other.verify_collisions
+        self.shards_touched |= other.shards_touched
+
 
 class _Shard:
     __slots__ = ("digests", "file_ids", "offsets", "keys")
@@ -338,6 +349,31 @@ class IndexStore:
         self._shards: Dict[int, _Shard] = {}
         self._blooms: Dict[int, BloomFilter] = {}
         self.stats = QueryStats()
+        # Concurrent lookup_batch callers (the service's scatter-gather
+        # workers) race the lazy first-touch np.load of a shard and the
+        # shared stats counters; both are serialized here.  Loads hold the
+        # lock only around the miss path, so warm probes stay lock-free on
+        # the dict read (GIL-atomic) and pay one uncontended acquire per
+        # stats flush.
+        self._load_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        # Cross-shard Bloom plane (lazy): every shard's bitmap concatenated
+        # so a multi-shard batch runs ONE vectorized filter pass instead of
+        # a per-shard pass whose fixed numpy dispatch cost dominates
+        # micro-batches.  Bitmaps are the small always-cheap part of the
+        # store (~bits_per_key/8 bytes per entry), so pinning them all is
+        # the designed serving posture; data columns stay mmap-lazy.
+        self._bloom_plane: Optional[Tuple[np.ndarray, ...]] = None
+        # Serving plane (opt-in via preload_digest_plane): digest, file_id
+        # and offset columns concatenated in shard order — digest-range
+        # partitioning makes the digest concatenation one globally sorted
+        # array, so a whole batch probes with ONE searchsorted and gathers
+        # its hit locations with vectorized fancy-indexing instead of a
+        # per-shard loop of scalar mmap reads.  Costs 20 resident
+        # bytes/entry (the fat keys column stays mmap-lazy), which is why
+        # it is the serving posture (the ShardRouter turns it on), not the
+        # default.
+        self._digest_plane: Optional[Tuple[np.ndarray, ...]] = None
 
     @classmethod
     def open(cls, root: Path, mmap: bool = True) -> "IndexStore":
@@ -364,25 +400,116 @@ class IndexStore:
     def _shard(self, s: int) -> _Shard:
         shard = self._shards.get(s)
         if shard is None:
-            stem = _shard_stem(s)
-            count = int(self.manifest["shards"][s]["count"])
-            shard = _Shard(*(self._load_column(stem, c, count) for c in _COLUMNS))
-            self._shards[s] = shard
+            with self._load_lock:  # double-checked: losers reuse the winner's
+                shard = self._shards.get(s)
+                if shard is None:
+                    stem = _shard_stem(s)
+                    count = int(self.manifest["shards"][s]["count"])
+                    shard = _Shard(
+                        *(self._load_column(stem, c, count) for c in _COLUMNS)
+                    )
+                    self._shards[s] = shard
         return shard
 
     def _bloom(self, s: int) -> BloomFilter:
         bloom = self._blooms.get(s)
         if bloom is None:
-            bits = np.load(self.root / f"{_shard_stem(s)}.bloom.npy")
-            bloom = BloomFilter(np.asarray(bits, dtype=np.uint8),
-                                int(self.manifest["shards"][s]["bloom_k"]))
-            self._blooms[s] = bloom
+            with self._load_lock:
+                bloom = self._blooms.get(s)
+                if bloom is None:
+                    bits = np.load(self.root / f"{_shard_stem(s)}.bloom.npy")
+                    bloom = BloomFilter(np.asarray(bits, dtype=np.uint8),
+                                        int(self.manifest["shards"][s]["bloom_k"]))
+                    self._blooms[s] = bloom
         return bloom
+
+    def _bloom_filter_plane(self) -> Tuple[np.ndarray, ...]:
+        """``(bits_concat, byte_off, m_mask, k)`` across all shards."""
+        plane = self._bloom_plane
+        if plane is None:
+            with self._load_lock:
+                plane = self._bloom_plane
+            if plane is not None:
+                return plane
+            blooms = [self._bloom(s) for s in range(self.n_shards)]
+            bits = np.concatenate([b.bits for b in blooms])
+            off = np.zeros(self.n_shards, dtype=np.int64)
+            np.cumsum([b.bits.shape[0] for b in blooms[:-1]], out=off[1:])
+            m_mask = np.array([b.m - 1 for b in blooms], dtype=np.uint64)
+            k = np.array([b.k for b in blooms], dtype=np.int64)
+            plane = (bits, off, m_mask, k)
+            with self._load_lock:
+                self._bloom_plane = plane
+        return plane
+
+    def preload_digest_plane(self) -> Tuple[Tuple[np.ndarray, ...], ...]:
+        """Pin the serving plane + Bloom plane (serving mode).
+
+        The serving plane is ``(digests, row_off, file_ids, offsets)``
+        concatenated across shards — 20 resident bytes/entry.  The fat
+        keys column (the verify column) stays mmap-lazy; only verified
+        hits fault its pages in.  Returns ``(serving_plane, bloom_plane)``
+        so replicas of the same store can share the (read-only) planes
+        instead of re-building.
+        """
+        if self._digest_plane is None:
+            counts = [int(m["count"]) for m in self.manifest["shards"]]
+            row_off = np.zeros(self.n_shards + 1, dtype=np.int64)
+            np.cumsum(counts, out=row_off[1:])
+            shards = [self._shard(s) for s in range(self.n_shards)]
+
+            def concat(arrs, dtype):
+                return (
+                    np.concatenate([np.asarray(a) for a in arrs])
+                    if arrs
+                    else np.empty(0, dtype=dtype)
+                )
+
+            d_all = concat([sh.digests for sh in shards], np.uint64)
+            f_all = concat([sh.file_ids for sh in shards], np.int32)
+            o_all = concat([sh.offsets for sh in shards], np.int64)
+            with self._load_lock:
+                self._digest_plane = (d_all, row_off, f_all, o_all)
+        return self._digest_plane, self._bloom_filter_plane()
+
+    def adopt_planes(
+        self, planes: Tuple[Tuple[np.ndarray, ...], ...]
+    ) -> None:
+        """Share another replica's (immutable) preloaded planes."""
+        digest_plane, bloom_plane = planes
+        with self._load_lock:
+            self._digest_plane = digest_plane
+            self._bloom_plane = bloom_plane
+
+    def _bloom_pass(self, q: np.ndarray, sid: np.ndarray) -> np.ndarray:
+        """One vectorized Bloom probe for a whole (multi-shard) batch.
+
+        Identical accept/reject decisions to probing each shard's filter
+        separately — same double-hash positions against the same bitmaps,
+        gathered through the concatenated plane — but one numpy pass
+        total, so a batch spread thinly over many shards (the continuous
+        micro-batching regime) no longer pays per-shard dispatch overhead.
+        """
+        from .bloom import _mix64
+
+        bits, off, m_mask, k = self._bloom_filter_plane()
+        kmax = int(k.max()) if len(k) else 1
+        h2 = _mix64(q) | np.uint64(1)
+        i = np.arange(kmax, dtype=np.uint64)[:, None]
+        pos = (q[None, :] + i * h2[None, :]) & m_mask[sid][None, :]
+        byte = bits[(pos >> np.uint64(3)).astype(np.int64) + off[sid][None, :]]
+        bit = (byte >> (pos & np.uint64(7)).astype(np.uint8)) & np.uint8(1)
+        # rows past a shard's own k are neutral (True) under the AND
+        valid = np.arange(kmax, dtype=np.int64)[:, None] < k[sid][None, :]
+        return np.where(valid, bit.astype(bool), True).all(axis=0)
 
     # -- core batched query --------------------------------------------------
 
     def lookup_batch(
-        self, keys: Sequence[str], probe: Optional[str] = None
+        self,
+        keys: Sequence[str],
+        probe: Optional[str] = None,
+        digests: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Resolve a batch of keys: ``(file_ids, offsets, hit_mask)``.
 
@@ -391,6 +518,12 @@ class IndexStore:
         digest-search backend: ``"host"`` (``np.searchsorted``), ``"device"``
         (the ``sorted_probe`` Pallas kernel — jnp reference off-TPU), or
         ``None``/"auto" (device only when JAX is already running on TPU).
+
+        ``digests`` (optional uint64, parallel to ``keys``) skips the
+        per-call ``digest_u64`` — the service's router digests a request
+        batch ONCE and hands each shard probe its slice.  Thread-safe:
+        concurrent callers may share one store (lazy shard loads and stats
+        flushes are serialized internally).
         """
         n = len(keys)
         file_ids = np.full(n, -1, dtype=np.int32)
@@ -403,23 +536,58 @@ class IndexStore:
         if probe not in ("host", "device"):
             raise ValueError(f"unknown probe backend {probe!r}")
 
-        q = digest_u64(keys, bits=self.digest_bits)
+        if digests is None:
+            q = digest_u64(keys, bits=self.digest_bits)
+        else:
+            q = np.asarray(digests, dtype=np.uint64)
+            if q.shape != (n,):
+                raise ValueError(
+                    f"digests shape {q.shape} does not match {n} keys"
+                )
         sid = shard_of(q, self.n_shards, self.digest_bits)
-        self.stats.queries += n
+        delta = QueryStats(queries=n)
 
-        for s in np.unique(sid):
-            s = int(s)
-            sel = np.nonzero(sid == s)[0]
-            passed = self._bloom(s).contains(q[sel])
-            self.stats.bloom_rejects += int(len(sel) - passed.sum())
+        if self._digest_plane is not None and probe == "host":
+            # serving posture: one global probe over the pinned digest plane
+            self._lookup_plane(keys, q, sid, file_ids, offsets, hit, delta)
+            delta.hits = int(hit.sum())
+            with self._stats_lock:
+                self.stats.merge(delta)
+            return file_ids, offsets, hit
+
+        # one stable argsort groups the batch by shard (contiguous slices);
+        # per-shard nonzero scans would cost O(S * n) numpy dispatches
+        order = np.argsort(sid, kind="stable")
+        uniq, group_starts = np.unique(sid[order], return_index=True)
+        # a multi-shard batch takes one cross-shard Bloom pass when the
+        # serving posture already pinned the plane (it covers ALL shards,
+        # so building it here would force every bitmap resident on a
+        # store that promised O(touched shards)); otherwise each touched
+        # shard probes its own lazily-loaded filter
+        passed_all = (
+            self._bloom_pass(q, sid)
+            if len(uniq) > 1 and self._bloom_plane is not None
+            else None
+        )
+
+        for gi in range(len(uniq)):
+            s = int(uniq[gi])
+            lo = group_starts[gi]
+            hi = group_starts[gi + 1] if gi + 1 < len(uniq) else n
+            sel = order[lo:hi]
+            if passed_all is not None:
+                passed = passed_all[sel]
+            else:
+                passed = self._bloom(s).contains(q[sel])
+            delta.bloom_rejects += int(len(sel) - passed.sum())
             sel = sel[passed]
             if not len(sel):
                 continue
             shard = self._shard(s)
-            self.stats.shards_touched.add(s)
+            delta.shards_touched.add(s)
             qd = q[sel]
             td = shard.digests
-            self.stats.digest_probes += int(len(sel))
+            delta.digest_probes += int(len(sel))
             if probe == "device":
                 found, starts = _probe_starts_device(td, qd)
             else:
@@ -427,7 +595,7 @@ class IndexStore:
                 inb = starts < len(td)
                 found = np.zeros(len(qd), dtype=bool)
                 found[inb] = td[starts[inb]] == qd[inb]
-            self.stats.bloom_false_positives += int((~found).sum())
+            delta.bloom_false_positives += int((~found).sum())
             for j in np.nonzero(found)[0]:
                 row = int(sel[j])
                 kb = keys[row].encode()
@@ -438,11 +606,94 @@ class IndexStore:
                         offsets[row] = shard.offsets[t]
                         hit[row] = True
                         break
-                    self.stats.verify_collisions += 1  # digest collision
+                    delta.verify_collisions += 1  # digest collision
                     t += 1
 
-        self.stats.hits += int(hit.sum())
+        delta.hits = int(hit.sum())
+        with self._stats_lock:
+            self.stats.merge(delta)
         return file_ids, offsets, hit
+
+    def _lookup_plane(
+        self,
+        keys: Sequence[str],
+        q: np.ndarray,
+        sid: np.ndarray,
+        file_ids: np.ndarray,
+        offsets: np.ndarray,
+        hit: np.ndarray,
+        delta: "QueryStats",
+    ) -> None:
+        """Batch probe against the pinned serving plane.
+
+        Identical results to the per-shard loop: same Bloom decisions,
+        same leftmost-of-run starts (the plane is the shard columns
+        concatenated in shard order, globally sorted), same full-key
+        verify discipline.  The verify itself is vectorized: candidate
+        key bytes gather through ONE fancy-index per touched shard and
+        compare in bulk; only candidates that fail that first compare
+        (digest collisions — rare by construction) fall back to the
+        scalar run scan.  Equal digests share top bits, so a run never
+        crosses a shard boundary.
+        """
+        d_all, row_off, f_all, o_all = self._digest_plane
+        passed = self._bloom_pass(q, sid)
+        delta.bloom_rejects += int(len(q) - passed.sum())
+        sel = np.nonzero(passed)[0]
+        if not len(sel):
+            return
+        delta.digest_probes += int(len(sel))
+        # same "touched" accounting as the per-shard loop: every shard
+        # with a Bloom-passing key counts, found or not (physically the
+        # plane answers non-hits without faulting shard columns, but the
+        # stats contract mirrors the loop so the paths stay comparable)
+        delta.shards_touched.update(
+            int(s) for s in np.unique(sid[sel])
+        )
+        qd = q[sel]
+        starts = np.searchsorted(d_all, qd, side="left")
+        inb = starts < len(d_all)
+        found = np.zeros(len(sel), dtype=bool)
+        found[inb] = d_all[starts[inb]] == qd[inb]
+        delta.bloom_false_positives += int((~found).sum())
+        fj = np.nonzero(found)[0]
+        if not len(fj):
+            return
+        frow = sel[fj]                  # batch rows with a digest hit
+        fpos = starts[fj]               # global plane positions (run heads)
+        fshard = (
+            np.searchsorted(row_off, fpos, side="right") - 1
+        ).astype(np.int64)
+        expected = np.array([keys[r].encode() for r in frow], dtype=np.bytes_)
+        ok = np.zeros(len(fj), dtype=bool)
+        for s in np.unique(fshard):
+            s = int(s)
+            g = np.nonzero(fshard == s)[0]
+            cand = self._shard(s).keys[fpos[g] - row_off[s]]  # one gather
+            ok[g] = cand == expected[g]
+        hrows = frow[ok]
+        file_ids[hrows] = f_all[fpos[ok]]
+        offsets[hrows] = o_all[fpos[ok]]
+        hit[hrows] = True
+        # First candidate mismatched: walk the equal-digest run (the
+        # Algorithm 3 collision discipline, scalar because it is rare).
+        for j in np.nonzero(~ok)[0]:
+            row = int(frow[j])
+            s = int(fshard[j])
+            shard = self._shard(s)
+            base = int(row_off[s])
+            end = int(row_off[s + 1])
+            kb = expected[j]
+            qdj = q[row]
+            t = int(fpos[j])
+            while t < end and d_all[t] == qdj:
+                if shard.keys[t - base] == kb:
+                    file_ids[row] = f_all[t]
+                    offsets[row] = o_all[t]
+                    hit[row] = True
+                    break
+                delta.verify_collisions += 1  # digest collision
+                t += 1
 
     # -- ByteOffsetIndex-compatible read surface -------------------------------
 

@@ -67,12 +67,20 @@ class IndexedDataset:
     as-verified — a corpus mutated underneath the loader would go
     unnoticed until eviction.  ``workers=0`` falls back to the serial
     per-record loop.
+
+    ``service`` (a :class:`repro.service.QueryService`) rides the shared
+    query service instead of a private index handle: step fetches then
+    coalesce with every other service caller (serving traffic, concurrent
+    loaders) through the continuous-batching scheduler, and the service's
+    scan-resistant record cache absorbs epoch repeats.  ``index`` may be
+    ``None`` in that case; the dataset's own ``cache``/``workers`` knobs
+    defer to the service's.
     """
 
     def __init__(
         self,
         store: RecordStore,
-        index,  # ByteOffsetIndex | IndexStore (batch read contract)
+        index,  # ByteOffsetIndex | IndexStore (batch read contract) | None
         seq_len: int,
         verify: bool = True,
         workers: int = 2,
@@ -80,21 +88,29 @@ class IndexedDataset:
         cache_records: int = 0,
         coalesce_gap: int = DEFAULT_COALESCE_GAP,
         span_guess: int = DEFAULT_SPAN_GUESS,
+        service=None,  # repro.service.QueryService
     ):
+        if index is None and service is None:
+            raise ValueError("need an index or a QueryService")
         self.store = store
         self.index = index
+        self.service = service
         self.seq_len = seq_len
         self.verify = verify
         self.workers = workers
         self.coalesce_gap = coalesce_gap
         self.span_guess = span_guess
-        self.cache = cache if cache is not None else (
-            RecordCache(capacity=cache_records) if cache_records > 0 else None
-        )
+        if service is not None:
+            self.cache = service.cache
+        else:
+            self.cache = cache if cache is not None else (
+                RecordCache(capacity=cache_records) if cache_records > 0 else None
+            )
         self.tok = ByteTokenizer()
         # dataset order = sorted index keys (deterministic across hosts;
         # iter_keys is the enumeration every index backend shares)
-        self.keys: List[str] = sorted(index.iter_keys())
+        enum = index if index is not None else service.router
+        self.keys: List[str] = sorted(enum.iter_keys())
         self.stats = StragglerStats()
         self.read_stats = ReadStats()
         # long-lived worker pool: fetch_many runs every training step, so
@@ -105,7 +121,10 @@ class IndexedDataset:
         return len(self.keys)
 
     def fetch_record(self, key: str) -> str:
-        loc = self.index.lookup(key)
+        if self.service is not None:
+            loc = self.service.lookup([key])[0]
+        else:
+            loc = self.index.lookup(key)
         if loc is None:
             raise KeyError(key)
         fname, off = loc
@@ -126,7 +145,16 @@ class IndexedDataset:
         Bloom-filtered, and probed together when the index is a sharded
         ``IndexStore``; the read phase then streams through the pipelined
         engine (coalesced preads, parallel file workers, cached records).
+        On the service path the same probe additionally coalesces with
+        concurrent service callers before it reaches the router.
         """
+        if self.service is not None:
+            res = self.service.fetch(keys, verify=self.verify)
+            if res.missing:
+                raise KeyError(f"{len(res.missing)} keys missing from index")
+            self.stats.fetches += res.seeks
+            self.stats.verify_failures += len(res.mismatches)
+            return res.records
         plan, missing = plan_extraction(self.index, keys)
         if missing:
             raise KeyError(f"{len(missing)} keys missing from index")

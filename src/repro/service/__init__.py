@@ -1,0 +1,28 @@
+"""repro.service — the async scatter-gather query service.
+
+The serving-grade face of the byte-offset index: many small concurrent
+lookup/extract requests are re-coalesced into the large batches the
+sharded :class:`~repro.core.store.IndexStore` and the pipelined
+:mod:`~repro.core.reader` engine are built for.
+
+Scatter-gather shard fan-out      → :mod:`repro.service.router`
+Continuous micro-batching queue   → :mod:`repro.service.scheduler`
+Typed facade (lookup/fetch/stats) → :mod:`repro.service.api`
+Closed-loop load generator        → :mod:`repro.service.loadgen`
+"""
+
+from .api import QueryService, ServiceConfig
+from .loadgen import LoadReport, run_closed_loop
+from .router import RouterStats, ShardRouter
+from .scheduler import MicroBatcher, SchedulerStats
+
+__all__ = [
+    "LoadReport",
+    "MicroBatcher",
+    "QueryService",
+    "RouterStats",
+    "SchedulerStats",
+    "ServiceConfig",
+    "ShardRouter",
+    "run_closed_loop",
+]

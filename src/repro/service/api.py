@@ -1,0 +1,336 @@
+"""QueryService — the typed facade over router → scheduler → reader → cache.
+
+One object owns the whole serving-grade read stack:
+
+    caller ── submit ──► MicroBatcher ── batched probe ──► ShardRouter
+                             │                                 │ scatter
+                             │                        IndexStore replicas
+                             ▼                                 │
+                     (file, offset) plan ◄─────── merge ───────┘
+                             │
+                             ▼
+                  reader.stream_plan (coalesced preads, file workers)
+                             │         with the shared RecordCache in front
+                             ▼
+                    verified records / stream
+
+``lookup`` answers "where is this key" through the continuous
+micro-batching admission queue, so any number of small concurrent
+callers probe as a few big batches.  ``fetch``/``fetch_stream`` carry on
+into the pipelined span engine with the service's scan-resistant record
+cache in front — the same call a one-off extraction makes, so bulk
+integration jobs and high-concurrency serving share one batched read
+contract (and one cache, which is why the cache's segmented admission
+matters: the bulk sweep must not evict the serving working set).
+
+Every layer keeps its own counters; :meth:`stats` merges them into one
+dict the launcher and benchmarks report from.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+from repro.core.cache import RecordCache
+from repro.core.extract import (
+    ExtractionResult,
+    assemble_plan,
+    extract,
+    extract_iter,
+)
+from repro.core.identifiers import hashed_key
+from repro.core.reader import (
+    DEFAULT_COALESCE_GAP,
+    DEFAULT_SPAN_GUESS,
+    DEFAULT_WORKERS,
+    ReadStats,
+)
+from repro.core.records import RecordStore
+
+from .router import DEFAULT_MIN_SCATTER_KEYS, DEFAULT_REPLICAS, ShardRouter
+from .scheduler import (
+    DEFAULT_MAX_BATCH,
+    DEFAULT_MAX_WAIT_MS,
+    BatchResult,
+    MicroBatcher,
+)
+
+__all__ = ["QueryService", "ServiceConfig"]
+
+
+@dataclass
+class ServiceConfig:
+    """Knobs for the full router → scheduler → reader → cache stack."""
+
+    # router
+    replicas: int = DEFAULT_REPLICAS
+    probe: Optional[str] = None            # IndexStore probe backend
+    min_scatter_keys: int = DEFAULT_MIN_SCATTER_KEYS
+    preload_digests: bool = True           # pin the global digest plane
+    # scheduler
+    max_batch: int = DEFAULT_MAX_BATCH
+    max_wait_ms: float = DEFAULT_MAX_WAIT_MS
+    # record cache (shared across every fetch path)
+    cache_records: int = 8192
+    cache_bytes: Optional[int] = None
+    # read engine
+    read_workers: int = DEFAULT_WORKERS
+    coalesce_gap: int = DEFAULT_COALESCE_GAP
+    span_guess: int = DEFAULT_SPAN_GUESS
+    verify: bool = True
+
+
+class QueryService:
+    """Async scatter-gather query service over one published index store.
+
+    ``records`` is the SDF corpus (:class:`RecordStore`); ``store`` is the
+    ``save_sharded`` directory or an already-built :class:`ShardRouter`.
+    The service is thread-safe by construction — that is its point: call
+    :meth:`lookup`/:meth:`fetch` from as many threads as you like and the
+    scheduler coalesces them.
+    """
+
+    def __init__(
+        self,
+        records: RecordStore,
+        store: Union[str, Path, ShardRouter],
+        config: Optional[ServiceConfig] = None,
+        cache: Optional[RecordCache] = None,
+    ):
+        self.records = records
+        self.config = config or ServiceConfig()
+        if isinstance(store, ShardRouter):
+            self.router = store
+            self._owns_router = False
+        else:
+            self.router = ShardRouter(
+                store,
+                replicas=self.config.replicas,
+                probe=self.config.probe,
+                min_scatter_keys=self.config.min_scatter_keys,
+                preload_digests=self.config.preload_digests,
+            )
+            self._owns_router = True
+        self.cache = cache if cache is not None else RecordCache(
+            capacity=self.config.cache_records,
+            max_bytes=self.config.cache_bytes,
+        )
+        self.batcher = MicroBatcher(
+            self.router.lookup_batch,
+            max_batch=self.config.max_batch,
+            max_wait_ms=self.config.max_wait_ms,
+        )
+        # long-lived span-engine pool shared by every fetch (per-call pool
+        # construction would dominate small fetches)
+        self.read_executor = ThreadPoolExecutor(
+            max_workers=max(1, self.config.read_workers),
+            thread_name_prefix="svc-reader",
+        )
+        self.read_stats = ReadStats()
+        self._read_stats_lock = threading.Lock()
+        self._closed = False
+
+    # -- identity ------------------------------------------------------------
+
+    @property
+    def key_mode(self) -> str:
+        return self.router.key_mode
+
+    def __len__(self) -> int:
+        return len(self.router)
+
+    # -- lookup surface (scheduler-coalesced) --------------------------------
+
+    def lookup_async(self, keys: Sequence[str]) -> "Future[BatchResult]":
+        """Submit a raw lookup; resolves to ``(file_ids, offsets, hit)``."""
+        return self.batcher.submit(keys)
+
+    def lookup_batch(
+        self, keys: Sequence[str], timeout: Optional[float] = None
+    ) -> BatchResult:
+        """The IndexStore batch contract, micro-batched: raw
+        ``(file_ids, offsets, hit_mask)`` with no per-key boxing — the
+        hot serving surface (``lookup`` builds name tuples on top)."""
+        return self.batcher.lookup(keys, timeout=timeout)
+
+    def lookup(
+        self, keys: Sequence[str], timeout: Optional[float] = None
+    ) -> List[Optional[Tuple[str, int]]]:
+        """``[(file_name, offset) | None]`` per key, probe-coalesced."""
+        fid, off, hit = self.batcher.lookup(keys, timeout=timeout)
+        names = self.router.file_names
+        return [
+            (names[fid[i]], int(off[i])) if hit[i] else None
+            for i in range(len(keys))
+        ]
+
+    def __contains__(self, key: str) -> bool:
+        return self.lookup([key])[0] is not None
+
+    def plan(
+        self,
+        targets: Sequence[str],
+        key_bits: int = 64,
+        sort_offsets: bool = True,
+    ):
+        """Per-file extraction plan via ONE scheduler-coalesced probe.
+
+        Same contract as :func:`repro.core.extract.plan_extraction`, but
+        the location probe goes through the admission queue, so concurrent
+        planners share probe batches.
+        """
+        hashed = self.key_mode == "hashed_key"
+        keys = [hashed_key(t, key_bits) if hashed else t for t in targets]
+        return assemble_plan(targets, keys, self.lookup(keys), sort_offsets)
+
+    # -- record surface (reader engine + shared cache) -----------------------
+
+    def fetch(
+        self,
+        targets: Sequence[str],
+        verify: Optional[bool] = None,
+        key_bits: int = 64,
+        workers: Optional[int] = None,
+    ) -> ExtractionResult:
+        """Algorithm 3 through the service: plan, read, verify, account.
+
+        Byte-identical to a direct serial ``extract`` — records in target
+        order, ``missing``/``mismatches`` identical — with the plan probe
+        coalesced and the reads riding the shared cache + read pool.
+        """
+        res = extract(
+            self.records,
+            None,
+            targets,
+            verify=self.config.verify if verify is None else verify,
+            key_bits=key_bits,
+            workers=workers,
+            coalesce_gap=self.config.coalesce_gap,
+            span_guess=self.config.span_guess,
+            service=self,
+        )
+        self._merge_read(res)
+        return res
+
+    def fetch_stream(
+        self,
+        targets: Sequence[str],
+        verify: Optional[bool] = None,
+        key_bits: int = 64,
+        result: Optional[ExtractionResult] = None,
+    ) -> Iterator[Tuple[str, str]]:
+        """Streaming fetch: yield ``(full_id, record)`` as each verifies."""
+        own = result if result is not None else ExtractionResult()
+        try:
+            yield from extract_iter(
+                self.records,
+                None,
+                targets,
+                verify=self.config.verify if verify is None else verify,
+                key_bits=key_bits,
+                coalesce_gap=self.config.coalesce_gap,
+                span_guess=self.config.span_guess,
+                result=own,
+                service=self,
+            )
+        finally:
+            self._merge_read(own)
+
+    def _merge_read(self, res: ExtractionResult) -> None:
+        delta = ReadStats(
+            files_opened=res.files_opened,
+            spans_read=res.spans_read,
+            bytes_read=res.bytes_read,
+            cache_hits=res.cache_hits,
+            records=res.seeks,
+        )
+        with self._read_stats_lock:
+            self.read_stats.merge(delta)
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        """One merged view across router, scheduler, reader, and cache."""
+        qs = self.router.query_stats()
+        rs = self.router.stats
+        ss = self.batcher.stats
+        cs = self.cache.stats
+        lat = self.batcher.latency_ms()
+        return {
+            "router": {
+                "replicas": self.router.replicas,
+                "n_shards": self.router.n_shards,
+                "batches": rs.batches,
+                "keys": rs.keys,
+                "scattered": rs.scattered,
+                "inline": rs.inline,
+                "shard_probes": rs.shard_probes,
+                "keys_per_shard": dict(sorted(rs.keys_per_shard.items())),
+            },
+            "store": {
+                "queries": qs.queries,
+                "hits": qs.hits,
+                "bloom_rejects": qs.bloom_rejects,
+                "bloom_false_positives": qs.bloom_false_positives,
+                "digest_probes": qs.digest_probes,
+                "verify_collisions": qs.verify_collisions,
+                "shards_touched": len(qs.shards_touched),
+            },
+            "scheduler": {
+                "requests": ss.requests,
+                "keys": ss.keys,
+                "batches": ss.batches,
+                "mean_batch_keys": ss.mean_batch_keys,
+                "batch_keys_max": ss.batch_keys_max,
+                "full_flushes": ss.full_flushes,
+                "cohort_flushes": ss.cohort_flushes,
+                "deadline_flushes": ss.deadline_flushes,
+                "immediate_flushes": ss.immediate_flushes,
+                "coalesced_batches": ss.coalesced_batches,
+                "coalesced_requests": ss.coalesced_requests,
+                "cancelled": ss.cancelled,
+                "latency_ms": lat,
+            },
+            "cache": {
+                "entries": len(self.cache),
+                "probation": self.cache.probation_len,
+                "protected": self.cache.protected_len,
+                "bytes": self.cache.cached_bytes,
+                "hits": cs.hits,
+                "misses": cs.misses,
+                "hit_rate": cs.hit_rate,
+                "evictions": cs.evictions,
+                "probation_hits": cs.probation_hits,
+                "promotions": cs.promotions,
+            },
+            "read": {
+                "files_opened": self.read_stats.files_opened,
+                "spans_read": self.read_stats.spans_read,
+                "bytes_read": self.read_stats.bytes_read,
+                "cache_hits": self.read_stats.cache_hits,
+                "records": self.read_stats.records,
+            },
+        }
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self, drain: bool = False) -> None:
+        """Stop the scheduler (cancelling queued lookups unless ``drain``),
+        the read pool, and — if this service built it — the router."""
+        if self._closed:
+            return
+        self._closed = True
+        self.batcher.close(drain=drain)
+        self.read_executor.shutdown(wait=False, cancel_futures=True)
+        if self._owns_router:
+            self.router.close()
+
+    def __enter__(self) -> "QueryService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

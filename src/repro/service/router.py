@@ -1,0 +1,243 @@
+"""ShardRouter — scatter-gather batched lookups over IndexStore replicas.
+
+One :class:`~repro.core.store.IndexStore` already routes a key batch to
+its digest-range shards internally, but it does so sequentially on the
+calling thread.  The router is the serving-grade face of the same
+contract: it owns ``N`` replica handles of one published store directory
+(replicas share pages through the OS page cache — an extra handle costs
+file descriptors and a manifest, not resident column memory), partitions
+each incoming key batch by :func:`~repro.core.store.shard_of`, and
+scatter-gathers the per-shard probes across a bounded worker pool, each
+worker checking out its own replica so no two probes contend on one
+store's lazy-load or stats state.
+
+Digesting happens ONCE per batch here (``digest_u64``), and each shard
+probe receives its digest slice (``IndexStore.lookup_batch(digests=…)``),
+so fan-out never re-pays the blake2b pass.  Small batches — the common
+case under the micro-batching scheduler — skip the pool entirely
+(``min_scatter_keys``): below that size the per-task dispatch overhead
+outweighs any overlap, and one replica probes the whole batch inline.
+
+This is the seam later multi-host serving plugs into: replace the
+replica checkout with an RPC stub per remote shard-set and the scatter,
+gather, and merge logic is unchanged.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.store import IndexStore, QueryStats, digest_u64, shard_of
+
+__all__ = ["RouterStats", "ShardRouter"]
+
+DEFAULT_REPLICAS = 2
+# Below this many keys a batch probes inline on one replica: task dispatch
+# plus replica checkout costs more than the scatter saves (the shard loop
+# is GIL-bound numpy; overlap only pays once slices are big enough for
+# the release-the-GIL stretches inside searchsorted/bloom to matter).
+DEFAULT_MIN_SCATTER_KEYS = 128
+
+
+@dataclass
+class RouterStats:
+    """Cumulative routing counters (scatter decisions + shard traffic)."""
+
+    batches: int = 0         # lookup_batch calls served
+    keys: int = 0            # keys routed in total
+    scattered: int = 0       # batches fanned out across the worker pool
+    inline: int = 0          # batches probed inline on one replica
+    shard_probes: int = 0    # per-shard probe tasks executed (scattered only)
+    # shard traffic of scattered batches (inline batches skip partitioning
+    # in the router entirely — the replica routes internally; its
+    # QueryStats carry the per-shard truth)
+    keys_per_shard: Dict[int, int] = field(default_factory=dict)
+
+    def note_shard_keys(self, sid: np.ndarray) -> None:
+        shards, counts = np.unique(sid, return_counts=True)
+        for s, c in zip(shards, counts):
+            s = int(s)
+            self.keys_per_shard[s] = self.keys_per_shard.get(s, 0) + int(c)
+
+
+class ShardRouter:
+    """Scatter-gather ``lookup_batch`` over ``replicas`` store handles.
+
+    The router's result contract is exactly :meth:`IndexStore.lookup_batch`
+    — ``(file_ids, offsets, hit_mask)`` with misses at ``-1``/``False`` —
+    so everything written against the store's batch read surface rides the
+    router unchanged.  ``stats()`` merges the replicas' per-shard
+    :class:`QueryStats` with the router's own scatter accounting.
+    """
+
+    def __init__(
+        self,
+        root: Union[str, Path],
+        replicas: int = DEFAULT_REPLICAS,
+        probe: Optional[str] = None,
+        mmap: bool = True,
+        min_scatter_keys: int = DEFAULT_MIN_SCATTER_KEYS,
+        preload_digests: bool = True,
+    ):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        self.root = Path(root)
+        self.probe = probe
+        self.min_scatter_keys = int(min_scatter_keys)
+        self._stores: List[IndexStore] = [
+            IndexStore.open(self.root, mmap=mmap) for _ in range(replicas)
+        ]
+        first = self._stores[0]
+        if preload_digests:
+            # serving posture: pin the global digest + Bloom planes once
+            # and share the read-only arrays across replicas
+            planes = first.preload_digest_plane()
+            for st in self._stores[1:]:
+                st.adopt_planes(planes)
+        self.key_mode: str = first.key_mode
+        self.n_shards: int = first.n_shards
+        self.digest_bits: int = first.digest_bits
+        self.file_names: List[str] = first.file_names
+        self._free: "queue.SimpleQueue[IndexStore]" = queue.SimpleQueue()
+        for st in self._stores:
+            self._free.put(st)
+        self._pool = ThreadPoolExecutor(
+            max_workers=replicas, thread_name_prefix="shard-router"
+        )
+        self.stats = RouterStats()
+        self._stats_lock = threading.Lock()
+        self._closed = False
+
+    @property
+    def replicas(self) -> int:
+        return len(self._stores)
+
+    def __len__(self) -> int:
+        return len(self._stores[0])
+
+    def iter_keys(self):
+        """Enumerate every key (builder-side; loads shards on replica 0)."""
+        return self._stores[0].iter_keys()
+
+    # -- the scatter-gather core --------------------------------------------
+
+    @contextmanager
+    def _replica(self):
+        """Check out a replica; at most ``replicas`` probes run at once."""
+        st = self._free.get()
+        try:
+            yield st
+        finally:
+            self._free.put(st)
+
+    def lookup_batch(
+        self, keys: Sequence[str], digests: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Resolve a batch: digest once, partition, scatter, merge."""
+        if self._closed:
+            raise RuntimeError("router is closed")
+        keys = list(keys)
+        n = len(keys)
+        if n == 0:
+            return (
+                np.empty(0, dtype=np.int32),
+                np.empty(0, dtype=np.int64),
+                np.empty(0, dtype=bool),
+            )
+        q = (
+            digest_u64(keys, bits=self.digest_bits)
+            if digests is None
+            else np.asarray(digests, dtype=np.uint64)
+        )
+        # micro-batches skip partitioning entirely: the replica's own
+        # lookup_batch routes internally, and per-call numpy overhead is
+        # exactly what the scheduler exists to amortize
+        groups = None
+        if n >= self.min_scatter_keys and len(self._stores) > 1:
+            sid = shard_of(q, self.n_shards, self.digest_bits)
+            # one stable argsort, not per-shard nonzero scans (same
+            # grouping the store's own batch path uses)
+            order = np.argsort(sid, kind="stable")
+            uniq, starts = np.unique(sid[order], return_index=True)
+            bounds = list(starts) + [n]
+            groups = [
+                order[bounds[i]:bounds[i + 1]] for i in range(len(uniq))
+            ]
+        scatter = groups is not None and len(groups) > 1
+        with self._stats_lock:
+            self.stats.batches += 1
+            self.stats.keys += n
+            if scatter:
+                self.stats.note_shard_keys(sid)
+                self.stats.scattered += 1
+                self.stats.shard_probes += len(groups)
+            else:
+                self.stats.inline += 1
+
+        if not scatter:
+            with self._replica() as st:
+                return st.lookup_batch(keys, probe=self.probe, digests=q)
+
+        def probe_group(sel: np.ndarray):
+            with self._replica() as st:
+                return st.lookup_batch(
+                    [keys[i] for i in sel], probe=self.probe, digests=q[sel]
+                )
+
+        file_ids = np.full(n, -1, dtype=np.int32)
+        offsets = np.full(n, -1, dtype=np.int64)
+        hit = np.zeros(n, dtype=bool)
+        for sel, fut in [
+            (sel, self._pool.submit(probe_group, sel)) for sel in groups
+        ]:
+            gfid, goff, ghit = fut.result()
+            file_ids[sel] = gfid
+            offsets[sel] = goff
+            hit[sel] = ghit
+        return file_ids, offsets, hit
+
+    # -- convenience + stats -------------------------------------------------
+
+    def locate_batch(
+        self, keys: Sequence[str]
+    ) -> List[Optional[Tuple[str, int]]]:
+        fid, off, hit = self.lookup_batch(keys)
+        return [
+            (self.file_names[fid[i]], int(off[i])) if hit[i] else None
+            for i in range(len(keys))
+        ]
+
+    def lookup(self, key: str) -> Optional[Tuple[str, int]]:
+        return self.locate_batch([key])[0]
+
+    def query_stats(self) -> QueryStats:
+        """Per-shard probe counters merged across every replica."""
+        merged = QueryStats()
+        for st in self._stores:
+            with st._stats_lock:
+                merged.merge(st.stats)
+        return merged
+
+    def resident_bytes(self) -> int:
+        """Columns faulted in across replicas (mmap pages are shared, so
+        this over-counts physical memory by design — it is the per-handle
+        view the capacity benchmarks track)."""
+        return sum(st.resident_bytes() for st in self._stores)
+
+    def close(self) -> None:
+        self._closed = True
+        self._pool.shutdown(wait=True, cancel_futures=True)
+
+    def __enter__(self) -> "ShardRouter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -367,6 +367,82 @@ def test_cache_skips_reparse_on_warm_verify(corpus, targets):
         victim.write_bytes(backup)
 
 
+def test_cache_scan_resistance_slru():
+    """One bulk sweep of one-touch inserts must not evict the protected
+    working set (segmented-LRU admission: new entries ride probation)."""
+    c = RecordCache(capacity=100)
+    working = [("hot", i) for i in range(40)]
+    for f, o in working:
+        c.put(f, o, f"rec{o}")
+    for f, o in working:
+        assert c.get(f, o) is not None  # second touch: promoted
+    assert c.stats.promotions == 40
+    assert c.stats.probation_hits == 40
+    assert c.protected_len == 40
+    # the sweep: 1000 records touched exactly once
+    for i in range(1000):
+        c.put("sweep", i, "x" * 20)
+    assert len(c) <= 100
+    assert c.stats.evictions >= 900
+    # the working set survived the sweep untouched
+    for f, o in working:
+        assert c.get(f, o) is not None, (f, o)
+    assert c.protected_len == 40
+
+
+def test_cache_protected_cap_demotes_not_evicts():
+    c = RecordCache(capacity=10, protected_frac=0.5)  # protected cap 5
+    for i in range(8):
+        c.put("f", i, f"r{i}")
+    for i in range(8):
+        c.get("f", i)  # promote all 8 -> 3 demotions back to probation
+    assert c.protected_len == 5
+    assert c.probation_len == 3
+    assert c.stats.demotions == 3
+    assert len(c) == 8  # demotion never evicts
+    # demoted entries are still hits (and re-promote)
+    assert c.get("f", 0) is not None
+
+
+def test_cache_validates_protected_frac():
+    with pytest.raises(ValueError):
+        RecordCache(capacity=10, protected_frac=0.0)
+    with pytest.raises(ValueError):
+        RecordCache(capacity=10, protected_frac=1.5)
+    # protected can never fill the whole cache: one admission slot stays
+    assert RecordCache(capacity=10, protected_frac=1.0).protected_capacity == 9
+
+
+def test_cache_never_starves_admission():
+    """A fully-promoted working set must not fossilize the cache: new
+    entries stay admittable (and can earn promotion) afterwards."""
+    c = RecordCache(capacity=4, protected_frac=1.0)
+    for i in range(4):
+        c.put("f", i, f"r{i}")
+        c.get("f", i)  # promote
+    c.put("f", 99, "new")
+    assert c.get("f", 99) is not None  # admitted, not evicted on arrival
+    # capacity=1 degenerates to a plain LRU of one, still admitting
+    tiny = RecordCache(capacity=1)
+    tiny.put("f", 0, "a")
+    assert tiny.get("f", 0) is not None
+    assert tiny.get("f", 0) is not None  # degenerate re-hit stays cached
+    tiny.put("f", 1, "b")
+    assert tiny.get("f", 1) is not None
+    assert tiny.get("f", 0) is None
+    assert tiny.stats.promotions == 0  # no protected segment to earn
+    # byte budget: a promoted set filling max_bytes must give way when
+    # the working set shifts (evict protected LRU, admit the newcomer)
+    cb = RecordCache(capacity=100, max_bytes=400)
+    for i in range(10):
+        cb.put("f", i, "x" * 40)
+        cb.get("f", i)  # promote; protected bytes == max_bytes
+    for i in range(50):
+        cb.put("g", i, "y" * 40)
+    assert cb.get("g", 49) is not None  # newcomers are admitted
+    assert cb.cached_bytes <= 400
+
+
 # ---------------------------------------------------------------------------
 # streaming API
 # ---------------------------------------------------------------------------

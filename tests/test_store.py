@@ -349,3 +349,68 @@ def test_intersect_sorted_survives_intra_table_collisions():
     assert got.ids == want
     # default width unchanged and still exact
     assert intersect_sorted(a, b, c).ids == want
+
+# ---------------------------------------------------------------------------
+# concurrency: cold-store thread safety + the pinned serving plane
+# ---------------------------------------------------------------------------
+
+def test_cold_store_survives_concurrent_first_touch(tmp_path):
+    """Many threads hammering a COLD store race the lazy shard/Bloom
+    np.load (the scatter-gather workers' access pattern); every thread
+    must see correct results and no partially-initialized shard."""
+    import threading
+
+    idx = synth_index(6000, n_files=5)
+    idx.save_sharded(tmp_path / "s", n_shards=16)
+    qs = IndexStore.open(tmp_path / "s")  # cold: nothing loaded yet
+    keys = list(idx.entries.keys())
+    absent = [f"InChI=1S/absent/{i}" for i in range(200)]
+    want = {k: idx.lookup(k) for k in keys}
+    errors = []
+
+    def hammer(seed: int) -> None:
+        try:
+            mine = keys[seed::12] + absent[seed::12]
+            locs = qs.locate_batch(mine)
+            for k, loc in zip(mine, locs):
+                assert loc == want.get(k), (k, loc)
+        except Exception as e:  # pragma: no cover - the regression signal
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(12)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert qs.shards_loaded == 16
+    assert qs.stats.queries == len(keys) + len(absent)  # no lost updates
+
+
+def test_serving_plane_parity_with_collisions(tmp_path):
+    """The pinned digest/file/offset plane must return exactly what the
+    per-shard probe returns — including collision runs at truncated
+    digest widths — with identical stats."""
+    idx = synth_index(9000, n_files=5)
+    idx.save_sharded(tmp_path / "s", n_shards=8, digest_bits=16)
+    plain = IndexStore.open(tmp_path / "s")
+    plane = IndexStore.open(tmp_path / "s")
+    planes = plane.preload_digest_plane()
+    keys = list(idx.entries.keys())[::2] + [
+        f"InChI=1S/absent/{i}" for i in range(500)
+    ]
+    want = plain.lookup_batch(keys)
+    got = plane.lookup_batch(keys)
+    for w, g in zip(want, got):
+        assert (w == g).all()
+    assert plain.stats.verify_collisions == plane.stats.verify_collisions
+    assert plain.stats.verify_collisions > 0  # 16-bit digests do collide
+    assert plain.stats.bloom_rejects == plane.stats.bloom_rejects
+    assert plain.stats.hits == plane.stats.hits
+    assert plain.stats.shards_touched == plane.stats.shards_touched
+    # adopt_planes shares the (read-only) planes across replicas
+    third = IndexStore.open(tmp_path / "s")
+    third.adopt_planes(planes)
+    got3 = third.lookup_batch(keys)
+    for w, g in zip(want, got3):
+        assert (w == g).all()
