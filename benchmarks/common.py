@@ -28,8 +28,12 @@ PAPER_N_TARGETS = 477_123
 PAPER_FOUND = 435_413
 PAPER_FINAL = 426_850
 
+# REPRO_BENCH_SCALE multiplies records-per-file (``run.py --scale``): the
+# stock corpus fits in one coalesce window per file, so backend and depth
+# effects only separate once the corpus is 10-100x deeper.
+BENCH_SCALE = int(os.environ.get("REPRO_BENCH_SCALE", "1"))
 BENCH_FILES = int(os.environ.get("REPRO_BENCH_FILES", "8"))
-BENCH_RPF = int(os.environ.get("REPRO_BENCH_RPF", "4000"))
+BENCH_RPF = int(os.environ.get("REPRO_BENCH_RPF", "4000")) * BENCH_SCALE
 CACHE = Path(os.environ.get("REPRO_BENCH_CACHE", "/root/repo/.bench_cache"))
 
 

@@ -13,7 +13,10 @@ tentpole adds on top of the paper's forward-seek loop:
 * ``extract.dense_*``        — a dense target set (every 7th record), where
   inter-target gaps actually fall inside the coalesce threshold and many
   records ride one pread span (the sparse intersection set sits ~150 KB
-  apart at bench scale, past any sane gap, so its spans stay 1/record).
+  apart at bench scale, past any sane gap, so its spans stay 1/record);
+* ``extract.cold_<backend>`` — the same cold extraction forced through
+  each span I/O backend (thread preadv / mmap / uring when the kernel
+  has it), parity asserted per backend.
 
 Besides CSV rows, the module records a machine-readable metrics dict
 (:func:`last_metrics`) which ``benchmarks/run.py`` writes to
@@ -24,12 +27,14 @@ asserted, not assumed.
 
 from __future__ import annotations
 
+import os
 from typing import Dict, List, Optional
 
 from repro.core.cache import RecordCache
 from repro.core.extract import extract
 from repro.core.index import build_index
 from repro.core.intersect import intersect_host
+from repro.core.iobackend import uring_available
 from repro.core.sdfgen import db_id_list
 
 from .common import bench_store, row, timeit
@@ -45,6 +50,28 @@ _LAST: Optional[Dict[str, object]] = None
 def last_metrics() -> Optional[Dict[str, object]]:
     """Metrics of the most recent :func:`run` (for BENCH_extract.json)."""
     return _LAST
+
+
+def _drop_page_cache(store) -> bool:
+    """Evict the corpus from the OS page cache (fadvise DONTNEED).
+
+    The paper's corpora are terabytes — extraction NEVER runs against a
+    warm page cache there, so every ``cold`` row below evicts first.
+    Without this the whole corpus sits cached after index construction
+    and the serial loop's per-record read is a ~1 µs memcpy instead of a
+    ~40 µs device read, hiding exactly the latency the async span window
+    exists to overlap.  Returns False where fadvise is unavailable.
+    """
+    if not hasattr(os, "posix_fadvise"):  # pragma: no cover - non-posix
+        return False
+    os.sync()  # dirty pages survive DONTNEED; flush them first
+    for fname in store.file_names():
+        fd = os.open(store.path_of(fname), os.O_RDONLY)
+        try:
+            os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+        finally:
+            os.close(fd)
+    return True
 
 
 def _identical(a, b) -> bool:
@@ -66,14 +93,24 @@ def run() -> List[str]:
     ).ids
     idx = build_index(store, key_mode="full_id")
 
+    # warm the machinery, not the data: first engine call pays one-time
+    # pool spin-up + verify-kernel first-touch (~15 ms) that would
+    # otherwise land entirely on the cold row
+    warm_t = targets[:64]
+    extract(store, idx, warm_t, workers=0)
+    extract(store, idx, warm_t, workers=ENGINE_WORKERS, coalesce_gap=ENGINE_GAP)
+
+    cold = _drop_page_cache(store)
     t_serial, res_serial = timeit(lambda: extract(store, idx, targets, workers=0))
     n = max(res_serial.found, 1)
     out.append(row(
         "extract.serial", t_serial,
         f"found {res_serial.found}; {n / max(t_serial, 1e-9):.0f} rec/s "
-        f"(workers=0: per-record seek + per-line scan)"))
+        f"(workers=0: per-record seek + per-line scan, "
+        f"page cache {'cold' if cold else 'WARM'})"))
 
     cache = RecordCache(capacity=2 * len(targets) + 16)
+    _drop_page_cache(store)
     t_cold, res_cold = timeit(lambda: extract(
         store, idx, targets,
         workers=ENGINE_WORKERS, coalesce_gap=ENGINE_GAP, cache=cache))
@@ -96,6 +133,31 @@ def run() -> List[str]:
     parity = _identical(res_serial, res_cold) and _identical(res_serial, res_warm)
     speedup_cold = t_serial / max(t_cold, 1e-9)
     speedup_warm = t_serial / max(t_warm, 1e-9)
+
+    # per-backend cold ablation: same targets, no cache, each span backend
+    # forced explicitly (auto picks uring when available, thread otherwise)
+    backend_metrics: Dict[str, Dict[str, object]] = {}
+    for be in ["thread", "mmap"] + (["uring"] if uring_available() else []):
+        _drop_page_cache(store)
+        t_be, res_be = timeit(lambda: extract(
+            store, idx, targets,
+            workers=ENGINE_WORKERS, coalesce_gap=ENGINE_GAP, backend=be))
+        be_parity = _identical(res_serial, res_be)
+        parity = parity and be_parity
+        out.append(row(
+            f"extract.cold_{be}", t_be,
+            f"{n / max(t_be, 1e-9):.0f} rec/s, depth peak "
+            f"{res_be.inflight_peak}, {res_be.spans_read} spans, "
+            f"{t_serial / max(t_be, 1e-9):.1f}x vs serial, "
+            f"parity={'ok' if be_parity else 'BROKEN'}"))
+        backend_metrics[be] = {
+            "seconds": t_be,
+            "records_per_sec": n / max(t_be, 1e-9),
+            "speedup_vs_serial": t_serial / max(t_be, 1e-9),
+            "inflight_peak": res_be.inflight_peak,
+            "spans_read": res_be.spans_read,
+            "parity": be_parity,
+        }
     out.append(row(
         "extract.speedup", 0.0,
         f"cold {speedup_cold:.1f}x, warm {speedup_warm:.1f}x vs serial; "
@@ -105,7 +167,9 @@ def run() -> List[str]:
     # dense extraction: every-7th-record targets keep inter-target gaps
     # inside the coalesce threshold, so span merging actually engages
     dense = db_id_list(spec, "chembl")
+    _drop_page_cache(store)
     t_dser, res_dser = timeit(lambda: extract(store, idx, dense, workers=0))
+    _drop_page_cache(store)
     t_deng, res_deng = timeit(lambda: extract(
         store, idx, dense, workers=ENGINE_WORKERS, coalesce_gap=ENGINE_GAP))
     nd = max(res_dser.found, 1)
@@ -145,7 +209,13 @@ def run() -> List[str]:
             "spans_read": res_cold.spans_read,
             "spans_per_record": spans_per_rec,
             "bytes_read": res_cold.bytes_read,
+            "read_backend": res_cold.read_backend,
+            "inflight_peak": res_cold.inflight_peak,
+            "verify_batches": res_cold.verify_batches,
+            "verify_records": res_cold.verify_records,
+            "verify_batch_max": res_cold.verify_batch_max,
         },
+        "backends": backend_metrics,
         "pipelined_warm": {
             "seconds": t_warm,
             "records_per_sec": n / max(t_warm, 1e-9),
@@ -162,6 +232,7 @@ def run() -> List[str]:
             "spans_per_record": dense_spans_per_rec,
             "speedup": t_dser / max(t_deng, 1e-9),
         },
+        "page_cache_cold": cold,
         "speedup_cold": speedup_cold,
         "speedup_warm": speedup_warm,
         "parity": parity,

@@ -12,7 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows (harness convention) covering:
   service   — continuous-batching query service vs per-key probing
   kernels   — TPU-adapted hot-loop throughput (hash_mix, sorted_probe)
 
-Corpus scale via REPRO_BENCH_FILES / REPRO_BENCH_RPF env vars.
+Corpus scale via REPRO_BENCH_FILES / REPRO_BENCH_RPF env vars, or
+``--scale N`` (→ REPRO_BENCH_SCALE) to multiply records-per-file 10-100x
+so span-backend and depth effects separate from fixed overheads.
 Roofline numbers come from the dry-run (results/dryrun.jsonl), not here.
 
 The extraction-engine and service modules additionally emit
@@ -25,6 +27,7 @@ across PRs.
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -42,6 +45,15 @@ def _write_metrics(metrics, env_var: str, default_name: str, tag: str) -> None:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--scale", type=int, default=None, metavar="N",
+        help="multiply records-per-file by N (10-100x separates backend "
+             "and depth effects; exported as REPRO_BENCH_SCALE)")
+    args = ap.parse_args()
+    if args.scale is not None:
+        # must land in the env before the bench modules import common.py
+        os.environ["REPRO_BENCH_SCALE"] = str(args.scale)
     from . import (
         collisions_eq45,
         extract_engine,

@@ -17,6 +17,23 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Opt into tcmalloc when the box has it: the span engine's multi-threaded
+# carve/decode path hits glibc malloc's arena locks otherwise.  Opt out
+# with REPRO_NO_TCMALLOC=1.
+if [[ -z "${REPRO_NO_TCMALLOC:-}" && "${LD_PRELOAD:-}" != *tcmalloc* ]]; then
+  for so in /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+            /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+            /usr/lib/aarch64-linux-gnu/libtcmalloc_minimal.so.4 \
+            /usr/lib/libtcmalloc_minimal.so.4 \
+            /usr/lib/libtcmalloc.so.4; do
+    if [[ -e "$so" ]]; then
+      export LD_PRELOAD="${LD_PRELOAD:+$LD_PRELOAD:}$so"
+      echo "== tcmalloc preloaded: $so =="
+      break
+    fi
+  done
+fi
+
 echo "== tier-1: pytest =="
 python -m pytest -x -q "$@"
 
@@ -97,10 +114,19 @@ for other in (piped, warm):
     assert other.mismatches == serial.mismatches
 assert warm.cache_hits == warm.seeks and warm.spans_read == 0
 assert serial.mismatches, "smoke corpus no longer seeds collisions"
+# every span backend must reproduce the serial loop byte-for-byte,
+# mismatches included
+from repro.core.iobackend import uring_available
+backends = ["thread", "mmap"] + (["uring"] if uring_available() else [])
+for be in backends:
+    r = extract(store, idx, targets, key_bits=16, workers=4, backend=be)
+    assert list(r.records.items()) == list(serial.records.items()), be
+    assert r.missing == serial.missing and r.mismatches == serial.mismatches, be
+    assert r.read_backend == be, (be, r.read_backend)
 print(f"extraction engine OK: {serial.found} records, "
       f"{len(serial.missing)} missing, {len(serial.mismatches)} mismatches "
-      f"identical on serial/pipelined/warm; {piped.spans_read} spans cold, "
-      f"{warm.cache_hits} cache hits warm")
+      f"identical on serial/pipelined/warm + backends {backends}; "
+      f"{piped.spans_read} spans cold, {warm.cache_hits} cache hits warm")
 PY
 
 echo "== service smoke: concurrent clients vs serial parity =="
@@ -195,5 +221,28 @@ print(f"BENCH_service.json OK: {m['service']['lookups_per_sec']:.0f} "
       f"{m['mean_coalesced_batch']:.1f} keys")
 PY
 rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON"
+
+echo "== bench-regression gate: committed BENCH_extract.json =="
+python - BENCH_extract.json <<'PY'
+import json, sys
+m = json.load(open(sys.argv[1]))
+cold, warm, parity = m["speedup_cold"], m["speedup_warm"], m["parity"]
+errs = []
+if parity is not True:
+    errs.append("parity flag is not true (serial vs engine diverged)")
+if warm < 5.0:
+    errs.append(f"speedup_warm {warm:.2f}x < 5x floor")
+if cold < 2.0:
+    errs.append(f"speedup_cold {cold:.2f}x < 2x floor")
+if errs:
+    print("BENCH REGRESSION in committed BENCH_extract.json:")
+    for e in errs:
+        print(f"  - {e}")
+    print("re-run `python -m benchmarks.run --scale 10` on a quiet box and "
+          "commit the refreshed metrics, or fix the read path.")
+    sys.exit(1)
+print(f"bench gate OK: cold {cold:.1f}x, warm {warm:.1f}x, parity true "
+      f"(backend {m['pipelined_cold'].get('read_backend', '?')})")
+PY
 
 echo "== all checks passed =="

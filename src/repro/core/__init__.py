@@ -2,7 +2,9 @@
 
 Phase 1 (index construction, Algorithm 2)  → :mod:`repro.core.index`
 Phase 2 (targeted extraction, Algorithm 3) → :mod:`repro.core.extract`
-Pipelined read engine (coalesced preads)   → :mod:`repro.core.reader`
+Async span read engine (coalesced spans)   → :mod:`repro.core.reader`
+Span I/O backends (uring/thread/mmap)      → :mod:`repro.core.iobackend`
+Batched verification (vectorized ids)      → :mod:`repro.core.verify`
 Record-content LRU cache                   → :mod:`repro.core.cache`
 Baseline (naïve scan, Algorithm 1)         → :mod:`repro.core.baseline`
 Identifier layer (InChI/InChIKey roles)    → :mod:`repro.core.identifiers`
@@ -25,7 +27,9 @@ from .collisions import (
 )
 from .cache import CacheStats, RecordCache
 from .extract import ExtractionResult, Mismatch, extract, extract_iter, plan_extraction
-from .reader import ReadStats, coalesce_spans, compare_ids_batch, stream_plan
+from .iobackend import RecordView, SpanBackend, resolve_backend, uring_available
+from .reader import ReadStats, coalesce_spans, stream_plan
+from .verify import VerifyBatcher, compare_ids_batch, recompute_ids_batch
 from .identifiers import (
     DEFAULT_KEY_BITS,
     PAPER_KEY_BITS,

@@ -9,6 +9,14 @@ verification.  This cache remembers both: the raw record text *and* the
 canonical id recomputed from it, keyed by the record's physical location
 ``(file_id, offset)``.
 
+Payloads may be decoded strings or zero-copy
+:class:`~repro.core.iobackend.RecordView` windows — the cache is
+agnostic (byte accounting uses ``len()``, identical for both).  Caching
+the *view* keeps the read path copy-free end to end: the entry pins its
+span buffer only until some consumer decodes it (``RecordView.text``
+memoizes the string and drops the buffer reference in place, so the
+cached entry itself stops pinning at the first delivery).
+
 Location keys (not identifier keys) make the cache correct under every
 key_mode: hashed-key collisions map two different lookup keys to one
 location, and the cache serves both from a single entry while the
@@ -70,7 +78,11 @@ class CacheStats:
 
 
 class RecordCache:
-    """SLRU cache of ``(file_id, offset) -> (record_text, recomputed_id)``.
+    """SLRU cache of ``(file_id, offset) -> (record_payload, recomputed_id)``.
+
+    ``record_payload`` is the record text as a ``str`` or an undecoded
+    :class:`~repro.core.iobackend.RecordView` (the engine caches views;
+    they decode lazily at the API boundary).
 
     ``recomputed_id`` is the canonical id re-derived from the record's
     structural data (``canonical_id_from_structure``), or ``None`` when the
@@ -155,7 +167,7 @@ class RecordCache:
         self,
         file_id: str,
         offset: int,
-        text: str,
+        text,  # str | RecordView
         recomputed_id: Optional[str] = None,
     ) -> None:
         """Insert or refresh an entry (refresh promotes to its segment's MRU).

@@ -17,9 +17,11 @@ them, Table II / §IV.D):
    structurally different molecule whose recomputed full id mismatches.
 
 Beyond the paper, the read phase itself is pipelined
-(:mod:`repro.core.reader`): targets coalesce into merged ``pread`` spans,
-record boundaries come from bulk ``bytes.find`` scans, files fan out over
-a thread pool, verification compares digest batches, and a
+(:mod:`repro.core.reader`): targets coalesce into merged spans submitted
+through a pluggable I/O backend (io_uring / threaded preadv / mmap),
+record boundaries come from bulk ``bytes.find`` scans over zero-copy
+span buffers, files fan out over a thread pool, verification runs as
+batched vectorized recomputes (:mod:`repro.core.verify`), and a
 :class:`~repro.core.cache.RecordCache` can absorb repeat fetches.
 ``workers=0`` preserves the exact serial reference loop for the ablation
 rows; both paths produce byte-identical ``records``/``missing``/
@@ -77,6 +79,11 @@ class ExtractionResult:
     cache_hits: int = 0       # records served from the RecordCache
     plan_seconds: float = 0.0  # plan/probe phase (batched index lookups)
     read_seconds: float = 0.0  # read+verify phase (Algorithm 3's loop)
+    read_backend: str = ""    # span backend the engine resolved to ("" = serial)
+    inflight_peak: int = 0    # max spans in flight at once (engine path)
+    verify_batches: int = 0   # physical combined verify batches
+    verify_records: int = 0   # records verified through batches
+    verify_batch_max: int = 0  # largest combined verify batch
 
     @property
     def found(self) -> int:
@@ -161,6 +168,9 @@ def extract(
     span_guess: int = DEFAULT_SPAN_GUESS,
     cache: Optional[RecordCache] = None,
     verify_backend: str = "auto",
+    backend=None,   # SpanBackend | name | None (REPRO_READER_BACKEND)
+    depth: Optional[int] = None,   # in-flight spans per worker (uring)
+    verifier=None,  # shared repro.core.verify.VerifyBatcher
     service=None,  # repro.service.QueryService — scheduler-coalesced plan path
 ) -> ExtractionResult:
     """Algorithm 3: seek-extract every target through the index.
@@ -198,6 +208,10 @@ def extract(
         executor = service.read_executor
         if workers is None:
             workers = service.config.read_workers
+        if backend is None:
+            backend = service.read_backend
+        if verifier is None:
+            verifier = service.verifier
     else:
         plan, missing = plan_extraction(index, targets, key_bits, sort_offsets)
     res.missing = missing
@@ -224,6 +238,9 @@ def extract(
             verify_backend=verify_backend,
             stats=stats,
             executor=executor,
+            backend=backend,
+            depth=depth,
+            verifier=verifier,
         ):
             res.seeks += 1
             if ev.ok:
@@ -236,6 +253,11 @@ def extract(
         res.bytes_read = stats.bytes_read
         res.spans_read = stats.spans_read
         res.cache_hits = stats.cache_hits
+        res.read_backend = stats.backend
+        res.inflight_peak = stats.inflight_peak
+        res.verify_batches = stats.verify_batches
+        res.verify_records = stats.verify_records
+        res.verify_batch_max = stats.verify_batch_max
     else:
         # serial reference paths (ablations): grouped forward seeks with the
         # per-line scan, or fully ungrouped one-open-per-target access
@@ -291,6 +313,9 @@ def extract_iter(
     span_guess: int = DEFAULT_SPAN_GUESS,
     cache: Optional[RecordCache] = None,
     verify_backend: str = "auto",
+    backend=None,   # SpanBackend | name | None (REPRO_READER_BACKEND)
+    depth: Optional[int] = None,
+    verifier=None,  # shared repro.core.verify.VerifyBatcher
     result: Optional[ExtractionResult] = None,
     service=None,  # repro.service.QueryService — scheduler-coalesced plan path
 ) -> Iterator[Tuple[str, str]]:
@@ -322,6 +347,10 @@ def extract_iter(
         executor = service.read_executor
         if workers is None:
             workers = service.config.read_workers
+        if backend is None:
+            backend = service.read_backend
+        if verifier is None:
+            verifier = service.verifier
     else:
         plan, missing = plan_extraction(index, targets, key_bits)
     if result is not None:
@@ -344,6 +373,9 @@ def extract_iter(
             verify_backend=verify_backend,
             stats=stats,
             executor=executor,
+            backend=backend,
+            depth=depth,
+            verifier=verifier,
         ):
             if result is not None:
                 result.seeks += 1
@@ -359,5 +391,12 @@ def extract_iter(
             result.bytes_read += stats.bytes_read
             result.spans_read += stats.spans_read
             result.cache_hits += stats.cache_hits
+            result.read_backend = result.read_backend or stats.backend
+            result.inflight_peak = max(result.inflight_peak, stats.inflight_peak)
+            result.verify_batches += stats.verify_batches
+            result.verify_records += stats.verify_records
+            result.verify_batch_max = max(
+                result.verify_batch_max, stats.verify_batch_max
+            )
             result.mismatches.sort(key=lambda m: (m.file, m.offset, m.expected_id))
             result.read_seconds = time.perf_counter() - t1

@@ -1,34 +1,48 @@
-"""Pipelined extraction engine: coalesced preads + parallel file workers.
+"""Async span engine: pluggable I/O backends, zero-copy records, batched verify.
 
 Algorithm 3's read phase, rebuilt for throughput.  The serial reference
 path (kept in :func:`repro.core.extract.extract` under ``workers=0`` for
-the ablation benchmarks) does one ``seek()`` per record and then walks the
-file line by line in Python until the ``$$$$`` terminator.  This engine
-replaces all three per-record costs with batched equivalents:
+the ablation benchmarks) does one ``seek()`` per record, walks the file
+line by line in Python, decodes eagerly, and re-verifies one record at a
+time.  This engine batches all four costs:
 
 1. **Span coalescing** — offset-sorted targets within a file are merged
-   into ``os.pread`` spans whenever the byte gap between the provisional
-   end of one record and the start of the next is at most ``coalesce_gap``
-   (the knob).  N nearby records then cost one syscall instead of N, and
-   the access pattern the paper could only *approximate* with forward
-   seeks becomes genuinely sequential.
-2. **Bulk boundary splitting** — record ends are found with C-speed
-   ``bytes.find(b"$$$$")`` scans over the coalesced buffer (with a
-   line-start + rest-of-line check so ``$$$$`` inside record data never
-   terminates early), not a per-line Python loop.  Records longer than the
-   provisional span are handled by doubling tail reads until the delimiter
-   (or EOF) appears.
-3. **Parallel file workers + batched verify** — files fan out across a
-   ``ThreadPoolExecutor`` (``pread`` releases the GIL, so reads overlap),
-   each worker verifying its own records: canonical ids are recomputed
-   once per record, then compared against the expected ids in one
-   vectorized ``hash_mix`` digest batch, falling back to a full-string
-   compare only where digests disagree (digest inequality *proves* string
-   inequality, so the fallback exists to document the mismatch, not to
-   decide it).
+   into read spans whenever the byte gap between the provisional end of
+   one record and the start of the next is at most ``coalesce_gap``.
+   N nearby records then cost one I/O submission instead of N.
+2. **Pluggable span backends** (:mod:`repro.core.iobackend`) — *how*
+   spans become bytes is delegated to a :class:`SpanBackend`:
+   ``uring`` submits a depth-controlled window of spans to a raw
+   io_uring ring and consumes completions in arrival order (one slow
+   span never stalls the window); ``thread`` is the portable blocking
+   ``preadv`` fallback; ``mmap`` maps whole files and serves spans as
+   windows of the page cache.  Select with ``REPRO_READER_BACKEND`` /
+   ``REPRO_READER_DEPTH`` (see :mod:`repro.flags`) or per call.
+3. **Zero-copy record views** — records are carved out of span buffers
+   as :class:`~repro.core.iobackend.RecordView` memoryview windows.  No
+   ``bytes`` copy of a record exists anywhere; boundary scans
+   (C-speed ``find(b"$$$$")``) run on the retained buffer, tail
+   extensions (a record overrunning its provisional span) happen
+   *before* views are carved (exported ``bytearray``\\ s cannot resize),
+   and the single materialization is the lazy UTF-8 decode at the API
+   boundary (``RecordView.text``), which also drops the buffer pin.
+4. **Batched verification** (:mod:`repro.core.verify`) — recomputed ids
+   come from one vectorized cross-record pass per worker chunk, and a
+   shared :class:`~repro.core.verify.VerifyBatcher` leader-combines
+   chunks across *all* workers (and, service-wide, across concurrent
+   fetches) into single recompute/compare batches — on TPU, one
+   ``hash_mix`` digest pass for everything in flight.
+
+Knob guidance: ``coalesce_gap`` trades wasted bytes for fewer
+submissions (raise it on storage with expensive round trips; lower it
+for very sparse target sets), ``span_guess`` should sit near the p90
+record size (too small costs tail-extension reads — watch
+``ReadStats.spans_read`` exceed span count; too large reads slack),
+``depth`` (uring) bounds in-flight spans per worker — raise it on
+high-latency storage, shrink it to bound buffer residency.
 
 A :class:`~repro.core.cache.RecordCache` can sit in front of the reads:
-hits skip the pread entirely, and hits that already carry a recomputed id
+hits skip the I/O entirely, and hits that already carry a recomputed id
 skip the structural re-parse too — a warm verified re-extraction touches
 no file and parses nothing.
 """
@@ -36,14 +50,21 @@ no file and parses nothing.
 from __future__ import annotations
 
 import os
-import sys
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+from repro import flags
 
 from .cache import RecordCache
-from .identifiers import canonical_id_from_structure
+from .iobackend import RecordView, SpanBackend, SpanBuffer, resolve_backend
 from .records import find_record_end
+from .verify import (
+    VerifyBatcher,
+    _recompute,
+    _tpu_backend_active,
+    compare_ids_batch,
+)
 
 __all__ = [
     "DEFAULT_COALESCE_GAP",
@@ -66,7 +87,7 @@ DEFAULT_SPAN_GUESS = 4096
 # would fault them in anyway) without degenerating into whole-file reads
 # for sparse target sets.
 DEFAULT_COALESCE_GAP = 32 * 1024
-# Hard cap on one coalesced span's pread size: bounds per-worker resident
+# Hard cap on one coalesced span's read size: bounds per-worker resident
 # memory on dense target sets (paper-scale files run to gigabytes; without
 # the cap a dense plan would materialize a whole file per worker).  A
 # single record larger than this still reads fully via tail extension.
@@ -75,31 +96,21 @@ DEFAULT_MAX_SPAN = 8 * 1024 * 1024
 # small host is fine and overlaps read with verify.
 DEFAULT_WORKERS = min(8, 2 * (os.cpu_count() or 1))
 
-_MAX_EXTEND = 1 << 20  # tail-extension reads cap at 1 MiB per pread
-_UNPARSEABLE = "<unparseable>"
-
-
-def _tpu_backend_active() -> bool:
-    """True only when JAX is ALREADY imported and its backend is TPU
-    (never imports jax — same discipline as the store's probe selection)."""
-    jax = sys.modules.get("jax")
-    if jax is None:
-        return False
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover - defensive
-        return False
-
 
 @dataclass
 class ReadStats:
-    """I/O accounting for one engine run (merged across file workers)."""
+    """I/O + verify accounting for one engine run (merged across workers)."""
 
     files_opened: int = 0
-    spans_read: int = 0      # pread calls issued (coalesced spans + extensions)
-    bytes_read: int = 0      # bytes actually pread (incl. coalescing overshoot)
+    spans_read: int = 0      # I/O submissions issued (spans + tail extensions)
+    bytes_read: int = 0      # bytes actually read (incl. coalescing overshoot)
     cache_hits: int = 0      # records served without touching the file
     records: int = 0         # records handled (verified + mismatched)
+    backend: str = ""        # span backend the run resolved to
+    inflight_peak: int = 0   # max spans simultaneously in flight (one worker)
+    verify_batches: int = 0  # physical combined verify batches
+    verify_records: int = 0  # records that rode a verify batch
+    verify_batch_max: int = 0  # largest combined batch observed
 
     def merge(self, other: "ReadStats") -> None:
         self.files_opened += other.files_opened
@@ -107,29 +118,45 @@ class ReadStats:
         self.bytes_read += other.bytes_read
         self.cache_hits += other.cache_hits
         self.records += other.records
+        self.backend = self.backend or other.backend
+        self.inflight_peak = max(self.inflight_peak, other.inflight_peak)
+        self.verify_batches += other.verify_batches
+        self.verify_records += other.verify_records
+        self.verify_batch_max = max(self.verify_batch_max, other.verify_batch_max)
 
 
-@dataclass(frozen=True)
 class ReadEvent:
     """One record's outcome: ``ok`` (verified or verify=False) or not.
 
+    ``payload`` is the record as read — a zero-copy
+    :class:`~repro.core.iobackend.RecordView` (or an already-decoded
+    ``str`` off the cache); ``text`` decodes at first access.
     ``found_id`` is the recomputed canonical id when verification ran
     (``None`` under ``verify=False``); for a mismatch it is the id of the
     structurally different molecule the bytes actually held.
     """
 
-    ok: bool
-    full_id: str
-    key: str
-    file: str
-    offset: int
-    text: str
-    found_id: Optional[str]
+    __slots__ = ("ok", "full_id", "key", "file", "offset", "payload",
+                 "found_id")
+
+    def __init__(self, ok, full_id, key, file, offset, payload, found_id):
+        self.ok = ok
+        self.full_id = full_id
+        self.key = key
+        self.file = file
+        self.offset = offset
+        self.payload = payload
+        self.found_id = found_id
+
+    @property
+    def text(self) -> str:
+        p = self.payload
+        return p if isinstance(p, str) else p.text
 
 
 @dataclass
 class Span:
-    """A merged pread range covering one or more record starts."""
+    """A merged read range covering one or more record starts."""
 
     start: int
     end: int                                    # provisional, exclusive
@@ -143,13 +170,13 @@ def coalesce_spans(
     file_size: Optional[int] = None,
     max_span: int = DEFAULT_MAX_SPAN,
 ) -> List[Span]:
-    """Merge ``(slot, offset)`` targets into pread spans.
+    """Merge ``(slot, offset)`` targets into read spans.
 
     Each record provisionally extends ``guess`` bytes past its start; a
     target joins the current span when its offset is at most ``gap`` bytes
     past the span's provisional end (``<=`` — a gap of exactly ``gap``
     bytes still merges) AND the merged span stays within ``max_span``
-    bytes (memory bound per pread buffer).  Ends are clamped to
+    bytes (memory bound per span buffer).  Ends are clamped to
     ``file_size`` when known.
     """
     if guess < 1:
@@ -179,121 +206,45 @@ def coalesce_spans(
     return spans
 
 
-class _SpanReader:
-    """Reads one coalesced span, extending the tail until records close."""
-
-    __slots__ = ("fd", "span", "fsize", "stats", "buf", "guess")
-
-    def __init__(self, fd: int, span: Span, fsize: int, guess: int, stats: ReadStats):
-        self.fd = fd
-        self.span = span
-        self.fsize = fsize
-        self.guess = guess
-        self.stats = stats
-        length = max(0, span.end - span.start)
-        self.buf = os.pread(fd, length, span.start)
-        stats.spans_read += 1
-        stats.bytes_read += len(self.buf)
-
-    def _at_eof(self) -> bool:
-        return self.span.start + len(self.buf) >= self.fsize
-
-    def _extend(self) -> bool:
-        """Grow the buffer tail; False when the file is exhausted."""
-        step = min(max(self.guess, len(self.buf)), _MAX_EXTEND)
-        extra = os.pread(self.fd, step, self.span.start + len(self.buf))
-        if not extra:
-            return False
-        self.stats.spans_read += 1
-        self.stats.bytes_read += len(extra)
-        self.buf += extra
-        return True
-
-    def record_at(self, off: int) -> str:
-        """The record text starting at absolute offset ``off``.
-
-        Byte-identical to the serial ``read_record_at``: everything from
-        the record start up to (not including) its terminator line, decoded
-        utf-8 with replacement.
-        """
-        rel = off - self.span.start
-        while True:
-            end, _nxt, definite = find_record_end(self.buf, rel, self._at_eof())
-            if definite:
-                return self.buf[rel:end].decode("utf-8", "replace")
-            if not self._extend():
-                # file shrank under us vs fstat: treat buffer end as EOF
-                end, _nxt, _ = find_record_end(self.buf, rel, True)
-                return self.buf[rel:end].decode("utf-8", "replace")
-
-
-# ---------------------------------------------------------------------------
-# Vectorized verification
-# ---------------------------------------------------------------------------
-
-def _recompute(text: str) -> str:
-    try:
-        return canonical_id_from_structure(text)
-    except ValueError:
-        return _UNPARSEABLE
-
-
-def _bucket(n: int, lo: int = 32) -> int:
-    b = lo
-    while b < n:
-        b <<= 1
-    return b
-
-
-def compare_ids_batch(
-    expected: Sequence[str],
-    recomputed: Sequence[str],
-    backend: str = "auto",
-) -> List[bool]:
-    """Per-record verification compare, vectorized.
-
-    ``backend="digest"`` packs both id columns into uint32 lanes and runs
-    ONE :func:`repro.kernels.hash_mix.ops.hash_mix` batch over them
-    (shapes are bucketed so the jit cache stays small), accepting records
-    whose 128-bit digests agree and falling back to a full-string compare
-    only on digest disagreement — digest inequality already proves string
-    inequality, so the fallback can only confirm the mismatch.
-    ``backend="string"`` compares strings directly.  ``"auto"`` follows the
-    store's probe discipline: the digest path only when JAX is already
-    imported AND running on TPU — a host-side extraction never pays the
-    framework import, and on CPU the C-speed string compare beats the jnp
-    reference kernel anyway.
-    """
-    if backend == "auto":
-        backend = "digest" if _tpu_backend_active() else "string"
-    if backend == "string":
-        return [e == r for e, r in zip(expected, recomputed)]
-    if backend != "digest":
-        raise ValueError(f"unknown verify backend {backend!r}")
-    n = len(expected)
-    if n == 0:
-        return []
-    import jax.numpy as jnp
-    import numpy as np
-
-    from repro.core.packing import lanes_for, pack_ids
-    from repro.kernels.hash_mix.ops import hash_mix
-
-    ids = list(expected) + list(recomputed)
-    lanes = _bucket(lanes_for(ids), lo=32)
-    m = _bucket(2 * n, lo=64)
-    ids += [""] * (m - 2 * n)
-    digests = np.asarray(hash_mix(jnp.asarray(pack_ids(ids, lanes))))
-    same = (digests[:n] == digests[n : 2 * n]).all(axis=1)
-    # Digest-equal => verified (a 128-bit expected/recomputed collision is
-    # negligible); digest-unequal => full-string compare, which documents
-    # the mismatch the digests already proved.
-    return [bool(s) or expected[i] == recomputed[i] for i, s in enumerate(same)]
-
-
 # ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
+
+def _carve_records(
+    buf: SpanBuffer,
+    members: Sequence[Tuple[int, int]],
+    backend: SpanBackend,
+    handle,
+    guess: int,
+    stats: ReadStats,
+    payloads: List,
+) -> None:
+    """Resolve every member record's end in ``buf``, then carve views.
+
+    Two passes on purpose: tail extensions resize the span's
+    ``bytearray``, which is illegal once a memoryview is exported — so
+    ALL ends are found (extending as needed) before ANY view is carved.
+    """
+    ends: List[Tuple[int, int, int]] = []
+    for slot, off in members:
+        rel = off - buf.base
+        while True:
+            end, _nxt, definite = find_record_end(buf.raw, rel, buf.at_eof)
+            if definite:
+                break
+            if not backend.extend(handle, buf, guess, stats):
+                # file exhausted (or unextendable backend): buffer end is EOF
+                end, _nxt, _ = find_record_end(buf.raw, rel, True)
+                break
+        ends.append((slot, rel, max(end, rel)))
+    for slot, rel, end in ends:
+        payloads[slot] = RecordView(buf, rel, end)
+    if ends:
+        # Freeze the buffer NOW: with the shared memoryview exported, an
+        # mmap close under live views raises (and is tolerated) instead
+        # of silently invalidating them before their records decode.
+        buf.view()
+
 
 def _process_file(
     path,
@@ -303,13 +254,15 @@ def _process_file(
     gap: int,
     guess: int,
     cache: Optional[RecordCache],
-    verify_backend: str,
+    verifier: VerifyBatcher,
     max_span: int,
+    backend: SpanBackend,
+    depth: int,
 ) -> Tuple[List[ReadEvent], ReadStats]:
-    """One worker's unit: read, split, and verify every target in a file."""
+    """One worker's unit: read, carve, and verify every target in a file."""
     stats = ReadStats()
     n = len(items)
-    texts: List[Optional[str]] = [None] * n
+    payloads: List = [None] * n          # RecordView | str (cache hits)
     rids: List[Optional[str]] = [None] * n
 
     to_read: List[int] = []
@@ -317,7 +270,7 @@ def _process_file(
         for i, (_fid, _key, off) in enumerate(items):
             hit = cache.get(fname, off)
             if hit is not None:
-                texts[i], rids[i] = hit
+                payloads[i], rids[i] = hit
                 stats.cache_hits += 1
             else:
                 to_read.append(i)
@@ -325,46 +278,48 @@ def _process_file(
         to_read = list(range(n))
 
     if to_read:
-        fd = os.open(path, os.O_RDONLY)
+        handle = backend.open(path)
         stats.files_opened += 1
         try:
-            fsize = os.fstat(fd).st_size
-            for span in coalesce_spans(
+            fsize = backend.size(handle)
+            spans = coalesce_spans(
                 [(i, items[i][2]) for i in to_read], gap, guess, fsize, max_span
-            ):
-                reader = _SpanReader(fd, span, fsize, guess, stats)
-                for slot, off in span.members:
-                    texts[slot] = reader.record_at(off)
-                # one cache insert per record: freshly-read text goes in with
-                # its recomputed id below when verifying (avoids double puts)
-                if cache is not None and not verify:
-                    for slot, off in span.members:
-                        cache.put(fname, off, texts[slot])
+            )
+            for span, buf in backend.read_spans(handle, spans, stats, depth):
+                _carve_records(
+                    buf, span.members, backend, handle, guess, stats, payloads
+                )
         finally:
-            os.close(fd)
+            backend.close_handle(handle)
 
-    events: List[ReadEvent] = []
     if verify:
-        for i in range(n):
-            if rids[i] is None:
-                rids[i] = _recompute(texts[i])  # type: ignore[arg-type]
-                if cache is not None:
-                    cache.put(fname, items[i][2], texts[i], rids[i])
-        ok = compare_ids_batch([it[0] for it in items], rids, verify_backend)
+        # records needing a cache (re-)insert: fresh reads, plus hits
+        # cached without an id (a verify=False run) now being upgraded
+        to_put = [i for i in range(n) if rids[i] is None] if cache is not None else ()
+        ok, rids = verifier.verify(
+            [it[0] for it in items], payloads, rids, stats
+        )
+        if cache is not None:
+            for i in to_put:
+                cache.put(fname, items[i][2], payloads[i], rids[i])
     else:
         ok = [True] * n
-    for i, (full_id, key, off) in enumerate(items):
-        events.append(
-            ReadEvent(
-                ok=ok[i],
-                full_id=full_id,
-                key=key,
-                file=fname,
-                offset=off,
-                text=texts[i],  # type: ignore[arg-type]
-                found_id=rids[i] if verify else None,
-            )
+        if cache is not None:
+            for i in to_read:
+                cache.put(fname, items[i][2], payloads[i])
+
+    events = [
+        ReadEvent(
+            ok=ok[i],
+            full_id=full_id,
+            key=key,
+            file=fname,
+            offset=off,
+            payload=payloads[i],
+            found_id=rids[i] if verify else None,
         )
+        for i, (full_id, key, off) in enumerate(items)
+    ]
     stats.records += n
     return events, stats
 
@@ -382,6 +337,9 @@ def stream_plan(
     stats: Optional[ReadStats] = None,
     max_span: int = DEFAULT_MAX_SPAN,
     executor: Optional[ThreadPoolExecutor] = None,
+    backend: Union[SpanBackend, str, None] = None,
+    depth: Optional[int] = None,
+    verifier: Optional[VerifyBatcher] = None,
 ) -> Iterator[ReadEvent]:
     """Stream :class:`ReadEvent`s for an extraction plan.
 
@@ -393,10 +351,20 @@ def stream_plan(
     in flight.  Event order across files is completion order — callers
     needing determinism must reorder (``extract`` does).
 
+    ``backend`` selects the span I/O backend: a
+    :class:`~repro.core.iobackend.SpanBackend` instance (borrowed — never
+    closed here; how a service shares its rings across fetches), a name
+    (``"uring"``/``"thread"``/``"mmap"``/``"auto"``), or ``None`` for the
+    ``REPRO_READER_BACKEND`` env default.  ``depth`` bounds in-flight
+    spans per worker (``None`` → ``REPRO_READER_DEPTH``).  ``verifier``
+    lends a shared :class:`~repro.core.verify.VerifyBatcher` (cross-call
+    verify combining); by default one is built from ``verify_backend``.
+
     At most ``2 * workers`` files are in flight at once (backpressure: a
     slow consumer of a huge plan never forces every file's records to sit
-    decoded in memory), and abandoning the generator early drops queued
-    files instead of joining the whole extraction.
+    in memory), and abandoning the generator early drops queued files
+    instead of joining the whole extraction — in-flight io_uring spans
+    are drained before their buffers are released.
 
     ``executor`` lends a long-lived pool (it is never shut down here) so
     hot-path callers — the training loader fetches every step — skip
@@ -406,48 +374,69 @@ def stream_plan(
     """
     if stats is None:
         stats = ReadStats()
+    owned_backend: Optional[SpanBackend] = None
+    if isinstance(backend, SpanBackend):
+        be = backend
+    else:
+        be = owned_backend = resolve_backend(backend)
+    stats.backend = stats.backend or be.name
+    if depth is None:
+        depth = flags.reader_depth()
+    if verify_backend == "auto":
+        verify_backend = flags.verify_backend()
+    vf = verifier if verifier is not None else VerifyBatcher(verify_backend)
     args = dict(
         verify=verify,
         gap=coalesce_gap,
         guess=span_guess,
         cache=cache,
-        verify_backend=verify_backend,
+        verifier=vf,
         max_span=max_span,
+        backend=be,
+        depth=depth,
     )
     files = list(plan.items())
-    if executor is None and (workers <= 1 or len(files) <= 1):
-        for fname, items in files:
-            events, fstats = _process_file(store.path_of(fname), fname, items, **args)
-            stats.merge(fstats)
-            yield from events
-        return
-
-    owned = executor is None
-    pool = executor if executor is not None else ThreadPoolExecutor(max_workers=workers)
-    pending: set = set()
-    todo = iter(files)
-    max_inflight = max(2 * workers, 2)
     try:
-        while True:
-            for fname, items in todo:
-                pending.add(pool.submit(
-                    _process_file, store.path_of(fname), fname, items, **args
-                ))
-                if len(pending) >= max_inflight:
-                    break
-            if not pending:
-                return
-            done, pending = wait(pending, return_when=FIRST_COMPLETED)
-            for fut in done:
-                events, fstats = fut.result()
+        if executor is None and (workers <= 1 or len(files) <= 1):
+            for fname, items in files:
+                events, fstats = _process_file(
+                    store.path_of(fname), fname, items, **args
+                )
                 stats.merge(fstats)
                 yield from events
+            return
+
+        owned = executor is None
+        pool = executor if executor is not None else ThreadPoolExecutor(
+            max_workers=workers
+        )
+        pending: set = set()
+        todo = iter(files)
+        max_inflight = max(2 * workers, 2)
+        try:
+            while True:
+                for fname, items in todo:
+                    pending.add(pool.submit(
+                        _process_file, store.path_of(fname), fname, items, **args
+                    ))
+                    if len(pending) >= max_inflight:
+                        break
+                if not pending:
+                    return
+                done, pending = wait(pending, return_when=FIRST_COMPLETED)
+                for fut in done:
+                    events, fstats = fut.result()
+                    stats.merge(fstats)
+                    yield from events
+        finally:
+            # An abandoned generator (consumer broke out of extract_iter)
+            # must not stall until every in-flight file finishes: drop
+            # queued files and return without joining the running ones.
+            if owned:
+                pool.shutdown(wait=False, cancel_futures=True)
+            else:
+                for fut in pending:
+                    fut.cancel()
     finally:
-        # An abandoned generator (consumer broke out of extract_iter) must
-        # not stall until every in-flight file finishes: drop queued files
-        # and return without joining the running ones.
-        if owned:
-            pool.shutdown(wait=False, cancel_futures=True)
-        else:
-            for fut in pending:
-                fut.cancel()
+        if owned_backend is not None:
+            owned_backend.close()

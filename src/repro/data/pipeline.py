@@ -34,6 +34,7 @@ import numpy as np
 from repro.core.cache import RecordCache
 from repro.core.extract import plan_extraction
 from repro.core.identifiers import canonical_id_from_structure
+from repro.core.iobackend import resolve_backend
 from repro.core.reader import (
     DEFAULT_COALESCE_GAP,
     DEFAULT_SPAN_GUESS,
@@ -66,7 +67,11 @@ class IndexedDataset:
     re-verifying.  Caching is opt-in because a cached record is served
     as-verified — a corpus mutated underneath the loader would go
     unnoticed until eviction.  ``workers=0`` falls back to the serial
-    per-record loop.
+    per-record loop.  ``reader_backend``/``reader_depth`` select and
+    window the span I/O backend (uring/thread/mmap — see
+    :mod:`repro.core.iobackend`); the backend handle is owned by the
+    dataset, opened lazily on the first engine fetch, and released by
+    :meth:`close`.
 
     ``service`` (a :class:`repro.service.QueryService`) rides the shared
     query service instead of a private index handle: step fetches then
@@ -89,6 +94,8 @@ class IndexedDataset:
         coalesce_gap: int = DEFAULT_COALESCE_GAP,
         span_guess: int = DEFAULT_SPAN_GUESS,
         service=None,  # repro.service.QueryService
+        reader_backend: Optional[str] = None,
+        reader_depth: Optional[int] = None,
     ):
         if index is None and service is None:
             raise ValueError("need an index or a QueryService")
@@ -100,6 +107,12 @@ class IndexedDataset:
         self.workers = workers
         self.coalesce_gap = coalesce_gap
         self.span_guess = span_guess
+        self.reader_backend = reader_backend
+        self.reader_depth = reader_depth
+        # span I/O backend is resolved lazily on the first engine fetch so
+        # datasets that only ride the service (or only fetch_record) never
+        # open a uring / spin up read state they won't use
+        self._backend = None
         if service is not None:
             self.cache = service.cache
         else:
@@ -131,7 +144,10 @@ class IndexedDataset:
         if self.cache is not None:
             hit = self.cache.get(fname, off)
             if hit is not None:
-                return hit[0]
+                p = hit[0]
+                # the engine caches zero-copy RecordViews; decode at the
+                # dataset's API boundary — callers get str, always
+                return p if isinstance(p, str) else p.text
         text = read_record_at(self.store.path_of(fname), off)
         if self.cache is not None:
             self.cache.put(fname, off, text)
@@ -162,6 +178,8 @@ class IndexedDataset:
         if self.workers > 0:
             if self.workers > 1 and self._pool is None:
                 self._pool = ThreadPoolExecutor(max_workers=self.workers)
+            if self._backend is None:
+                self._backend = resolve_backend(self.reader_backend)
             for ev in stream_plan(
                 self.store,
                 plan,
@@ -172,6 +190,8 @@ class IndexedDataset:
                 cache=self.cache,
                 stats=self.read_stats,
                 executor=self._pool,
+                backend=self._backend,
+                depth=self.reader_depth,
             ):
                 self.stats.fetches += 1
                 if ev.ok:
@@ -195,6 +215,15 @@ class IndexedDataset:
                             continue
                     out[full_id] = text
         return out
+
+    def close(self) -> None:
+        """Release the worker pool and the owned span I/O backend."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+        if self._backend is not None:
+            self._backend.close()
+            self._backend = None
 
     def example(self, idx: int) -> Tuple[np.ndarray, np.ndarray]:
         key = self.keys[idx % len(self.keys)]

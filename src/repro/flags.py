@@ -45,6 +45,38 @@ DECODE_CHUNKED = os.environ.get("REPRO_DECODE_CHUNKED", "0") == "1"
 REMAT_POLICY = os.environ.get("REPRO_REMAT_POLICY", "names")
 
 
+# Read-engine knobs (read dynamically, not at import: tests and launchers
+# flip them per run):
+#   REPRO_READER_BACKEND — span I/O backend for core.reader / the service:
+#       "auto"   — io_uring when the kernel supports it, else "thread"
+#       "uring"  — raw io_uring submission queue (Linux; depth-controlled
+#                  in-flight span windows, one enter() per window)
+#       "thread" — synchronous preadv per span (the portable fallback)
+#       "mmap"   — map whole files, serve records as zero-copy views of the
+#                  page cache (no pread syscalls at all; opt-in: span/byte
+#                  accounting semantics differ from the pread backends)
+#   REPRO_READER_DEPTH — target in-flight spans per uring submission window
+#       (default 32; clamped to the ring size).  Higher depths help cold
+#       NVMe / networked storage; on a warm page cache it mostly bounds
+#       buffer residency.
+#   REPRO_VERIFY_BACKEND — id-recompute/compare mode for VerifyBatcher:
+#       "auto" (vectorized recompute, digest compare on TPU else string),
+#       "vector", "process" (fork-pool recompute off the GIL), "string" /
+#       "digest" (per-record reference modes, combining disabled).
+
+
+def reader_backend() -> str:
+    return os.environ.get("REPRO_READER_BACKEND", "auto")
+
+
+def reader_depth() -> int:
+    return int(os.environ.get("REPRO_READER_DEPTH", "32"))
+
+
+def verify_backend() -> str:
+    return os.environ.get("REPRO_VERIFY_BACKEND", "auto")
+
+
 def remat_policy():
     import jax
 

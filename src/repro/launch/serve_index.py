@@ -22,12 +22,46 @@ single key, so the entire win must come from cross-client batching).
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import tempfile
 from pathlib import Path
 
 from repro.core import IndexStore, RecordStore, build_index, extract
 from repro.core.sdfgen import CorpusSpec, generate_corpus
 from repro.service import QueryService, ServiceConfig, run_closed_loop
+
+# places distros drop tcmalloc; probed in order, first hit wins
+_TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/aarch64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+
+
+def _maybe_preload_tcmalloc() -> None:
+    """Re-exec under tcmalloc when the library is present.
+
+    The span engine's carve/decode path allocates from several threads at
+    once; glibc malloc's arena locking shows up as serving jitter there.
+    tcmalloc's thread-local caches remove it.  Opt out with
+    ``REPRO_NO_TCMALLOC=1``; the ``_REPRO_TCMALLOC`` guard keeps the
+    re-exec from recursing, and boxes without the library run as-is.
+    """
+    if os.environ.get("REPRO_NO_TCMALLOC") or os.environ.get("_REPRO_TCMALLOC"):
+        return
+    if "tcmalloc" in os.environ.get("LD_PRELOAD", ""):
+        return
+    for so in _TCMALLOC_CANDIDATES:
+        if os.path.exists(so):
+            env = dict(os.environ)
+            env["LD_PRELOAD"] = ":".join(
+                p for p in (env.get("LD_PRELOAD", ""), so) if p
+            )
+            env["_REPRO_TCMALLOC"] = "1"
+            os.execve(sys.executable, [sys.executable] + sys.argv, env)
 
 
 def _demo_store(records: int, files: int, n_shards: int):
@@ -58,7 +92,15 @@ def main():
     ap.add_argument("--seconds", type=float, default=2.0)
     ap.add_argument("--skip-naive", action="store_true")
     ap.add_argument("--skip-parity", action="store_true")
+    ap.add_argument("--reader-backend", default=None,
+                    choices=["auto", "uring", "thread", "mmap", "serial"],
+                    help="span I/O backend (default: REPRO_READER_BACKEND "
+                         "env or auto)")
+    ap.add_argument("--reader-depth", type=int, default=None,
+                    help="max in-flight spans per file read "
+                         "(default: REPRO_READER_DEPTH env or 32)")
     args = ap.parse_args()
+    _maybe_preload_tcmalloc()
 
     if args.store:
         store_dir = Path(args.store)
@@ -74,6 +116,8 @@ def main():
         replicas=args.replicas,
         max_batch=args.max_batch,
         max_wait_ms=args.max_wait_ms,
+        reader_backend=args.reader_backend,
+        reader_depth=args.reader_depth,
     )
     svc = QueryService(rstore, store_dir, cfg)
     keys = sorted(svc.router.iter_keys())
@@ -131,6 +175,12 @@ def main():
     print(f"cache: {cache['hit_rate']:.0%} hit rate, "
           f"{cache['protected']} protected / {cache['probation']} probation "
           f"entries")
+    rd = s["read"]
+    print(f"read: backend={rd['backend']}, {rd['spans_read']} spans / "
+          f"{rd['bytes_read'] / 1e6:.2f} MB for {rd['records']} records "
+          f"(depth peak {rd['inflight_peak']}, {rd['cache_hits']} cache "
+          f"hits); verify {rd['verify_records']} recs in "
+          f"{rd['verify_batches']} batches (max {rd['verify_batch_max']})")
     svc.close()
 
 

@@ -17,11 +17,19 @@ One object owns the whole serving-grade read stack:
 ``lookup`` answers "where is this key" through the continuous
 micro-batching admission queue, so any number of small concurrent
 callers probe as a few big batches.  ``fetch``/``fetch_stream`` carry on
-into the pipelined span engine with the service's scan-resistant record
+into the async span engine with the service's scan-resistant record
 cache in front — the same call a one-off extraction makes, so bulk
 integration jobs and high-concurrency serving share one batched read
 contract (and one cache, which is why the cache's segmented admission
 matters: the bulk sweep must not evict the serving working set).
+``fetch_async`` is the fully non-blocking variant: the probe rides the
+admission queue, the read phase runs on the service's pools, and the
+caller gets a future — end-to-end async through the MicroBatcher.
+
+The service owns one long-lived span backend (io_uring rings persist
+across fetches; ``ServiceConfig.reader_backend``/``reader_depth``) and
+one shared :class:`~repro.core.verify.VerifyBatcher`, so recompute/
+digest verification batches combine across every concurrent fetch.
 
 Every layer keeps its own counters; :meth:`stats` merges them into one
 dict the launcher and benchmarks report from.
@@ -30,6 +38,7 @@ dict the launcher and benchmarks report from.
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from pathlib import Path
@@ -38,18 +47,22 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 from repro.core.cache import RecordCache
 from repro.core.extract import (
     ExtractionResult,
+    Mismatch,
     assemble_plan,
     extract,
     extract_iter,
 )
 from repro.core.identifiers import hashed_key
+from repro.core.iobackend import resolve_backend
 from repro.core.reader import (
     DEFAULT_COALESCE_GAP,
     DEFAULT_SPAN_GUESS,
     DEFAULT_WORKERS,
     ReadStats,
+    stream_plan,
 )
 from repro.core.records import RecordStore
+from repro.core.verify import VerifyBatcher
 
 from .router import DEFAULT_MIN_SCATTER_KEYS, DEFAULT_REPLICAS, ShardRouter
 from .scheduler import (
@@ -82,6 +95,16 @@ class ServiceConfig:
     coalesce_gap: int = DEFAULT_COALESCE_GAP
     span_guess: int = DEFAULT_SPAN_GUESS
     verify: bool = True
+    # span I/O backend: "auto"/"uring"/"thread"/"mmap"; None reads
+    # REPRO_READER_BACKEND.  The service owns ONE long-lived backend
+    # instance (io_uring rings persist across fetches).
+    reader_backend: Optional[str] = None
+    # in-flight spans per file worker (None -> REPRO_READER_DEPTH)
+    reader_depth: Optional[int] = None
+    # verification backend for the shared VerifyBatcher: "auto" (vector
+    # recompute + device digest compare when live), "vector", "process",
+    # or the legacy per-record "string"/"digest" paths
+    verify_backend: str = "auto"
 
 
 class QueryService:
@@ -129,6 +152,17 @@ class QueryService:
         self.read_executor = ThreadPoolExecutor(
             max_workers=max(1, self.config.read_workers),
             thread_name_prefix="svc-reader",
+        )
+        # One span backend for the service's lifetime (io_uring rings and
+        # their fds are per-thread and expensive to rebuild per fetch) and
+        # one VerifyBatcher, so verification batches combine across every
+        # concurrent fetch — service-wide continuous verify batching.
+        self.read_backend = resolve_backend(self.config.reader_backend)
+        self.verifier = VerifyBatcher(self.config.verify_backend)
+        # tiny pool that runs fetch_async read phases off the scheduler's
+        # flush thread (the probe callback must never do blocking I/O)
+        self._orchestrator = ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix="svc-fetch"
         )
         self.read_stats = ReadStats()
         self._read_stats_lock = threading.Lock()
@@ -211,10 +245,99 @@ class QueryService:
             workers=workers,
             coalesce_gap=self.config.coalesce_gap,
             span_guess=self.config.span_guess,
+            depth=self.config.reader_depth,
             service=self,
         )
         self._merge_read(res)
         return res
+
+    def fetch_async(
+        self,
+        targets: Sequence[str],
+        verify: Optional[bool] = None,
+        key_bits: int = 64,
+        workers: Optional[int] = None,
+    ) -> "Future[ExtractionResult]":
+        """Non-blocking :meth:`fetch`: async end-to-end through the stack.
+
+        The plan probe is submitted to the :class:`MicroBatcher` admission
+        queue without waiting (it coalesces with every other in-flight
+        probe); when the batch resolves, the span-engine read phase runs
+        on the service's pools and the returned future resolves to the
+        same :class:`ExtractionResult` a blocking :meth:`fetch` returns.
+        The caller's thread never blocks — submit N fetches, then gather.
+        """
+        do_verify = self.config.verify if verify is None else verify
+        hashed = self.key_mode == "hashed_key"
+        targets = list(targets)
+        keys = [hashed_key(t, key_bits) if hashed else t for t in targets]
+        t0 = time.perf_counter()
+        probe = self.batcher.submit(keys)
+        out: "Future[ExtractionResult]" = Future()
+
+        def read_phase(pf: Future) -> None:
+            if not out.set_running_or_notify_cancel():  # pragma: no cover
+                return
+            try:
+                fids, offs, hit = pf.result()
+                names = self.router.file_names
+                locs = [
+                    (names[fids[i]], int(offs[i])) if hit[i] else None
+                    for i in range(len(keys))
+                ]
+                plan, missing = assemble_plan(targets, keys, locs)
+                res = ExtractionResult()
+                res.missing = missing
+                res.plan_seconds = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                stats = ReadStats()
+                found: Dict[str, str] = {}
+                for ev in stream_plan(
+                    self.records,
+                    plan,
+                    verify=do_verify,
+                    workers=(self.config.read_workers
+                             if workers is None else workers),
+                    coalesce_gap=self.config.coalesce_gap,
+                    span_guess=self.config.span_guess,
+                    cache=self.cache,
+                    stats=stats,
+                    executor=self.read_executor,
+                    backend=self.read_backend,
+                    depth=self.config.reader_depth,
+                    verifier=self.verifier,
+                ):
+                    res.seeks += 1
+                    if ev.ok:
+                        found[ev.full_id] = ev.text
+                    else:
+                        res.mismatches.append(Mismatch(
+                            ev.full_id, ev.found_id, ev.file, ev.offset, ev.key
+                        ))
+                res.records = {t: found[t] for t in targets if t in found}
+                res.mismatches.sort(
+                    key=lambda m: (m.file, m.offset, m.expected_id)
+                )
+                res.files_opened = stats.files_opened
+                res.bytes_read = stats.bytes_read
+                res.spans_read = stats.spans_read
+                res.cache_hits = stats.cache_hits
+                res.read_backend = stats.backend
+                res.inflight_peak = stats.inflight_peak
+                res.verify_batches = stats.verify_batches
+                res.verify_records = stats.verify_records
+                res.verify_batch_max = stats.verify_batch_max
+                res.read_seconds = time.perf_counter() - t1
+                self._merge_read(res)
+                out.set_result(res)
+            except BaseException as e:
+                out.set_exception(e)
+
+        # hop off the scheduler's flush thread before doing blocking I/O
+        probe.add_done_callback(
+            lambda pf: self._orchestrator.submit(read_phase, pf)
+        )
+        return out
 
     def fetch_stream(
         self,
@@ -234,6 +357,7 @@ class QueryService:
                 key_bits=key_bits,
                 coalesce_gap=self.config.coalesce_gap,
                 span_guess=self.config.span_guess,
+                depth=self.config.reader_depth,
                 result=own,
                 service=self,
             )
@@ -247,6 +371,11 @@ class QueryService:
             bytes_read=res.bytes_read,
             cache_hits=res.cache_hits,
             records=res.seeks,
+            backend=res.read_backend,
+            inflight_peak=res.inflight_peak,
+            verify_batches=res.verify_batches,
+            verify_records=res.verify_records,
+            verify_batch_max=res.verify_batch_max,
         )
         with self._read_stats_lock:
             self.read_stats.merge(delta)
@@ -308,11 +437,16 @@ class QueryService:
                 "promotions": cs.promotions,
             },
             "read": {
+                "backend": self.read_stats.backend or self.read_backend.name,
                 "files_opened": self.read_stats.files_opened,
                 "spans_read": self.read_stats.spans_read,
                 "bytes_read": self.read_stats.bytes_read,
                 "cache_hits": self.read_stats.cache_hits,
                 "records": self.read_stats.records,
+                "inflight_peak": self.read_stats.inflight_peak,
+                "verify_batches": self.read_stats.verify_batches,
+                "verify_records": self.read_stats.verify_records,
+                "verify_batch_max": self.read_stats.verify_batch_max,
             },
         }
 
@@ -325,7 +459,9 @@ class QueryService:
             return
         self._closed = True
         self.batcher.close(drain=drain)
+        self._orchestrator.shutdown(wait=drain, cancel_futures=not drain)
         self.read_executor.shutdown(wait=False, cancel_futures=True)
+        self.read_backend.close()
         if self._owns_router:
             self.router.close()
 

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ThreadPoolExecutor, as_completed
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -195,9 +195,12 @@ class ShardRouter:
         file_ids = np.full(n, -1, dtype=np.int32)
         offsets = np.full(n, -1, dtype=np.int64)
         hit = np.zeros(n, dtype=bool)
-        for sel, fut in [
-            (sel, self._pool.submit(probe_group, sel)) for sel in groups
-        ]:
+        # merge in completion order (same discipline as the span engine's
+        # depth window): the gather thread scatters results back the
+        # moment any shard lands instead of serializing on the slowest
+        futs = {self._pool.submit(probe_group, sel): sel for sel in groups}
+        for fut in as_completed(futs):
+            sel = futs[fut]
             gfid, goff, ghit = fut.result()
             file_ids[sel] = gfid
             offsets[sel] = goff
