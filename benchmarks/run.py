@@ -17,12 +17,16 @@ Corpus scale via REPRO_BENCH_FILES / REPRO_BENCH_RPF env vars, or
 so span-backend and depth effects separate from fixed overheads.
 Roofline numbers come from the dry-run (results/dryrun.jsonl), not here.
 
-The extraction-engine and service modules additionally emit
-machine-readable metrics to ``BENCH_extract.json`` / ``BENCH_service.json``
-at the repo root (override with ``REPRO_BENCH_EXTRACT_OUT`` /
-``REPRO_BENCH_SERVICE_OUT``) so records/sec, cache hit rate, sustained
-lookups/sec, p50/p99 latency, and the coalescing speedups are tracked
-across PRs.
+The extraction-engine, service, and similarity modules additionally emit
+machine-readable metrics (``BENCH_extract.json`` / ``BENCH_service.json``
+/ ``BENCH_similarity.json``) so records/sec, cache hit rate, sustained
+lookups/sec, p50/p99 latency, and the batching speedups are tracked
+across PRs.  The committed copies at the repo root are only rewritten
+with ``--update-metrics`` (run it on a quiet box when regenerating the
+tracked numbers); plain runs park their metrics in the bench cache so a
+smoke pass never churns the committed files.  ``REPRO_BENCH_EXTRACT_OUT``
+/ ``REPRO_BENCH_SERVICE_OUT`` / ``REPRO_BENCH_SIMILARITY_OUT`` override
+the destination outright.
 """
 
 from __future__ import annotations
@@ -35,11 +39,21 @@ import time
 from pathlib import Path
 
 
-def _write_metrics(metrics, env_var: str, default_name: str, tag: str) -> None:
+def _write_metrics(
+    metrics, env_var: str, default_name: str, tag: str, update: bool
+) -> None:
     if not metrics:
         return
     out = os.environ.get(env_var)
-    path = Path(out) if out else Path(__file__).resolve().parents[1] / default_name
+    if out:
+        path = Path(out)
+    elif update:
+        path = Path(__file__).resolve().parents[1] / default_name
+    else:
+        from .common import CACHE
+
+        CACHE.mkdir(parents=True, exist_ok=True)
+        path = CACHE / default_name
     path.write_text(json.dumps(metrics, indent=1, sort_keys=True) + "\n")
     print(f"{tag}.metrics_written,0,{path}", flush=True)
 
@@ -50,6 +64,11 @@ def main() -> None:
         "--scale", type=int, default=None, metavar="N",
         help="multiply records-per-file by N (10-100x separates backend "
              "and depth effects; exported as REPRO_BENCH_SCALE)")
+    ap.add_argument(
+        "--update-metrics", action="store_true",
+        help="rewrite the committed BENCH_*.json files at the repo root; "
+             "without it metrics land in the bench cache (env overrides "
+             "such as REPRO_BENCH_EXTRACT_OUT always win)")
     args = ap.parse_args()
     if args.scale is not None:
         # must land in the env before the bench modules import common.py
@@ -60,6 +79,7 @@ def main() -> None:
         fig2_scaling,
         kernels_tpu,
         service_load,
+        similarity,
         table1_scan,
         table2_speedup,
         table3_resources,
@@ -75,6 +95,7 @@ def main() -> None:
         ("fig2", fig2_scaling),
         ("extract", extract_engine),
         ("service", service_load),
+        ("similarity", similarity),
         ("kernels", kernels_tpu),
     ]
     print("name,us_per_call,derived")
@@ -92,9 +113,14 @@ def main() -> None:
             flush=True,
         )
     _write_metrics(extract_engine.last_metrics(),
-                   "REPRO_BENCH_EXTRACT_OUT", "BENCH_extract.json", "extract")
+                   "REPRO_BENCH_EXTRACT_OUT", "BENCH_extract.json",
+                   "extract", args.update_metrics)
     _write_metrics(service_load.last_metrics(),
-                   "REPRO_BENCH_SERVICE_OUT", "BENCH_service.json", "service")
+                   "REPRO_BENCH_SERVICE_OUT", "BENCH_service.json",
+                   "service", args.update_metrics)
+    _write_metrics(similarity.last_metrics(),
+                   "REPRO_BENCH_SIMILARITY_OUT", "BENCH_similarity.json",
+                   "similarity", args.update_metrics)
     if failures:
         sys.exit(1)
 

@@ -6,10 +6,14 @@
 # a pipelined-extraction smoke (parallel engine vs serial loop parity on a
 # collision-seeded corpus), a query-service smoke (concurrent clients
 # through the micro-batching scheduler: byte parity vs the serial
-# reference + a nonzero coalesced-batch count), and a smoke-scale pass of
+# reference + a nonzero coalesced-batch count), a similarity smoke (the
+# Tanimoto Pallas kernel in interpret mode vs the NumPy oracle on a
+# collision-seeded plane, byte-exact top-k), and a smoke-scale pass of
 # the full benchmark harness — which must also produce the
-# BENCH_extract.json and BENCH_service.json metrics files — so the bench
-# modules can't silently rot.
+# BENCH_extract.json / BENCH_service.json / BENCH_similarity.json
+# metrics files — so the bench modules can't silently rot.  Smoke runs
+# park their metrics at temp paths; the committed BENCH_*.json files
+# only change via `python -m benchmarks.run --update-metrics`.
 #
 # Usage: scripts/check.sh [extra pytest args]
 set -euo pipefail
@@ -180,19 +184,47 @@ with QueryService(store, sdir, ServiceConfig(replicas=2)) as svc:
           f"(mean {sch['mean_batch_keys']:.1f} keys)")
 PY
 
+echo "== similarity smoke: Tanimoto kernel (interpret) vs oracle =="
+python - <<'PY'
+import numpy as np
+from repro.core.fingerprint import fingerprint_batch
+from repro.kernels.tanimoto.ops import tanimoto_topk, tanimoto_topk_host
+from repro.kernels.tanimoto.ref import tanimoto_topk_ref
+
+# collision-seeded plane: repetitions of "ABC" share one trigram set, so
+# the corpus carries byte-identical fingerprints and the top-k tie
+# discipline (score desc, row asc) is load-bearing, not incidental
+texts = ["ABC" * r for r in range(2, 10)] + [f"CID/{i:05d}" for i in range(120)]
+db, dc = fingerprint_batch(texts)
+q, _ = fingerprint_batch(["ABCABC", "CID/00042", "ZZZ"])
+ref = tanimoto_topk_ref(q, db, 8)
+kern = tanimoto_topk(q, db, 8, interpret=True)
+host = tanimoto_topk_host(q, db, 8)
+for tag, got in (("pallas-interpret", kern), ("host-blocked", host)):
+    assert np.array_equal(ref[0], got[0]), f"{tag}: top-k scores diverge"
+    assert np.array_equal(ref[1], got[1]), f"{tag}: top-k indices diverge"
+assert kern[1][0].tolist() == list(range(8)), "tie flood must rank row-asc"
+assert float(kern[0][0, 0]) == 1.0, "self-hit must score 1.0"
+print(f"tanimoto parity OK: {len(texts)} rows, 8 seeded fingerprint "
+      f"collisions, kernel == host == oracle byte-for-byte")
+PY
+
 echo "== bench smoke: full harness at smoke scale =="
 BENCH_OUT=$(mktemp)
 BENCH_JSON=$(mktemp -u)
 BENCH_SVC_JSON=$(mktemp -u)
+BENCH_SIM_JSON=$(mktemp -u)
 if ! REPRO_BENCH_FILES=2 REPRO_BENCH_RPF=250 \
      REPRO_BENCH_CACHE="${TMPDIR:-/tmp}/repro_bench_smoke" \
      REPRO_BENCH_EXTRACT_OUT="$BENCH_JSON" \
      REPRO_BENCH_SERVICE_OUT="$BENCH_SVC_JSON" \
+     REPRO_BENCH_SIMILARITY_OUT="$BENCH_SIM_JSON" \
      REPRO_BENCH_SERVICE_SECONDS=0.4 \
+     REPRO_BENCH_SIM_SECONDS=0.4 \
      python -m benchmarks.run > "$BENCH_OUT"; then
   echo "benchmark harness failed:"
   grep '\.ERROR,' "$BENCH_OUT" || tail -5 "$BENCH_OUT"
-  rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON"
+  rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON" "$BENCH_SIM_JSON"
   exit 1
 fi
 echo "bench harness OK: $(wc -l < "$BENCH_OUT") CSV rows"
@@ -220,7 +252,18 @@ print(f"BENCH_service.json OK: {m['service']['lookups_per_sec']:.0f} "
       f"lookups/s ({m['speedup_vs_naive']:.1f}x naive), mean batch "
       f"{m['mean_coalesced_batch']:.1f} keys")
 PY
-rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON"
+test -s "$BENCH_SIM_JSON" || { echo "BENCH_similarity.json not produced"; exit 1; }
+python - "$BENCH_SIM_JSON" <<'PY'
+import json, sys
+m = json.load(open(sys.argv[1]))
+for key in ("qps", "speedup_kernel_vs_naive", "service", "parity_flags",
+            "parity"):
+    assert key in m, f"BENCH_similarity.json missing {key!r}"
+assert m["parity"] is True, "a similarity backend diverged from the oracle"
+print(f"BENCH_similarity.json OK: {m['qps']['kernel']:.0f} q/s "
+      f"({m['speedup_kernel_vs_naive']:.1f}x naive loop), parity true")
+PY
+rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON" "$BENCH_SIM_JSON"
 
 echo "== bench-regression gate: committed BENCH_extract.json =="
 python - BENCH_extract.json <<'PY'
@@ -238,11 +281,34 @@ if errs:
     print("BENCH REGRESSION in committed BENCH_extract.json:")
     for e in errs:
         print(f"  - {e}")
-    print("re-run `python -m benchmarks.run --scale 10` on a quiet box and "
-          "commit the refreshed metrics, or fix the read path.")
+    print("re-run `python -m benchmarks.run --scale 10 --update-metrics` "
+          "on a quiet box and commit the refreshed metrics, or fix the "
+          "read path.")
     sys.exit(1)
 print(f"bench gate OK: cold {cold:.1f}x, warm {warm:.1f}x, parity true "
       f"(backend {m['pipelined_cold'].get('read_backend', '?')})")
+PY
+
+echo "== bench-regression gate: committed BENCH_similarity.json =="
+python - BENCH_similarity.json <<'PY'
+import json, sys
+m = json.load(open(sys.argv[1]))
+speedup, parity = m["speedup_kernel_vs_naive"], m["parity"]
+errs = []
+if parity is not True:
+    errs.append("parity flag is not true (a backend diverged from the "
+                "oracle or the service path)")
+if speedup < 3.0:
+    errs.append(f"speedup_kernel_vs_naive {speedup:.2f}x < 3x floor")
+if errs:
+    print("BENCH REGRESSION in committed BENCH_similarity.json:")
+    for e in errs:
+        print(f"  - {e}")
+    print("re-run `python -m benchmarks.run --update-metrics` on a quiet "
+          "box and commit the refreshed metrics, or fix the scoring path.")
+    sys.exit(1)
+print(f"similarity gate OK: {m['qps']['kernel']:.0f} q/s via "
+      f"{m['config']['backend']} ({speedup:.1f}x naive loop), parity true")
 PY
 
 echo "== all checks passed =="

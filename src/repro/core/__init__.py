@@ -15,6 +15,7 @@ Synthetic corpus (scale model of PubChem)  → :mod:`repro.core.sdfgen`
 TPU packing layer (ids → uint32 lanes)     → :mod:`repro.core.packing`
 Sharded query service (mmap + Bloom)       → :mod:`repro.core.store`
 Bloom-filter prefilter sidecars            → :mod:`repro.core.bloom`
+Fingerprint bit-planes (similarity)        → :mod:`repro.core.fingerprint`
 """
 
 from .baseline import BaselineResult, estimate_runtime, measure_scan_throughput, naive_scan
@@ -48,6 +49,12 @@ from .index import (
     update_index,
 )
 from .bloom import BloomFilter
+from .fingerprint import (
+    DEFAULT_FP_BITS,
+    fingerprint_batch,
+    fold_fingerprint,
+    popcount_u32,
+)
 from .intersect import IntersectionResult, intersect_host, intersect_sorted
 from .packing import lanes_for, pack_ids, unpack_ids
 from .store import (
@@ -55,6 +62,7 @@ from .store import (
     QueryStats,
     candidate_runs,
     digest_u64,
+    merge_similar_topk,
     save_sharded,
     shard_of,
 )

@@ -220,12 +220,15 @@ class ByteOffsetIndex:
         n_shards: int = 16,
         digest_bits: int = 64,
         bloom_bits_per_key: int = 12,
+        fingerprint_bits: Optional[int] = 1024,
     ) -> Dict[str, object]:
         """Publish the index as a sharded mmap-backed store directory.
 
         The serving-grade persistence path (:mod:`repro.core.store`):
         digest-range shards of the packed sidecar columns plus per-shard
-        Bloom bitmaps.  Re-publishing after an incremental
+        Bloom bitmaps plus — unless ``fingerprint_bits=None`` — packed
+        ``fingerprint_bits``-wide fingerprint planes for Tanimoto
+        similarity search.  Re-publishing after an incremental
         :func:`update_index` rewrites only shards whose content changed.
         """
         from .store import save_sharded  # local import: store builds on index
@@ -236,6 +239,7 @@ class ByteOffsetIndex:
             n_shards=n_shards,
             digest_bits=digest_bits,
             bloom_bits_per_key=bloom_bits_per_key,
+            fingerprint_bits=fingerprint_bits,
         )
 
 

@@ -16,6 +16,8 @@ bitmap, under one JSON manifest:
       shard_0003.offsets.npy     # int64 byte offsets
       shard_0003.keys.npy        # |S<w> full keys (the verify column)
       shard_0003.bloom.npy       # packed Bloom bitmap (uint8)
+      shard_0003.fps.npy         # (N, W) uint32 fingerprint bit-plane
+      shard_0003.fpcounts.npy    # int32 per-row popcounts (union term)
 
 Query model (batch-first — ``lookup_batch(keys)``):
 
@@ -34,6 +36,14 @@ shards), and an untouched store costs only its manifest.  ``ByteOffsetIndex``
 remains the builder: :func:`save_sharded` skips rewriting shards whose
 content hash is unchanged, so incremental index updates republish only the
 shards they touched.
+
+Beyond exact-key lookup, each shard carries a **fingerprint plane**
+(``fps``/``fpcounts`` sidecars, see :mod:`repro.core.fingerprint`): packed
+``(N, W)`` uint32 bit-rows in the same digest-sorted row order as the data
+columns, enabling the second query modality — :meth:`IndexStore.similar_batch`
+screens a batch of query fingerprints against every shard's plane with the
+batched Tanimoto top-k kernel and merges the per-shard winners into global
+``(scores, file_ids, offsets)``.
 """
 
 from __future__ import annotations
@@ -49,12 +59,19 @@ from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from .bloom import BloomFilter
+from .fingerprint import (
+    DEFAULT_FP_BITS,
+    fingerprint_batch,
+    popcount_u32,
+    words_for,
+)
 
 __all__ = [
     "IndexStore",
     "QueryStats",
     "candidate_runs",
     "digest_u64",
+    "merge_similar_topk",
     "save_sharded",
     "shard_of",
 ]
@@ -134,6 +151,46 @@ def _u64_to_pairs(d: np.ndarray) -> np.ndarray:
     return np.stack([hi, lo], axis=1)
 
 
+def merge_similar_topk(
+    parts: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]], k: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Merge per-shard ``(scores, file_ids, offsets)`` top-k candidates.
+
+    The cross-shard tie contract: global order is ``(score desc, file_id
+    asc, offset asc)`` — shard-local row order is digest order, meaningless
+    across shards, so equal Tanimoto scores from different shards must
+    break on the *location* the caller actually receives or the merged
+    ranking would depend on shard layout.  Implemented as three stable
+    argsorts (offset, then file_id, then ``-score``) == one lexsort with
+    score majorizing.  Pad slots (score ``-1``) sort last under ``-score``
+    regardless of their location columns.  Used by both
+    :meth:`IndexStore.similar_batch` (merging shards) and the router
+    (merging replica scatter results) so the two paths cannot drift.
+    """
+    scores = np.concatenate([p[0] for p in parts], axis=1)
+    fids = np.concatenate([p[1] for p in parts], axis=1)
+    offs = np.concatenate([p[2] for p in parts], axis=1)
+
+    def take(order):
+        return (
+            np.take_along_axis(scores, order, axis=1),
+            np.take_along_axis(fids, order, axis=1),
+            np.take_along_axis(offs, order, axis=1),
+        )
+
+    scores, fids, offs = take(np.argsort(offs, axis=1, kind="stable"))
+    scores, fids, offs = take(np.argsort(fids, axis=1, kind="stable"))
+    scores, fids, offs = take(
+        np.argsort(-scores, axis=1, kind="stable")[:, :k]
+    )
+    pad = scores < 0.0
+    return (
+        np.where(pad, np.float32(-1.0), scores).astype(np.float32, copy=False),
+        np.where(pad, np.int32(-1), fids).astype(np.int32, copy=False),
+        np.where(pad, np.int64(-1), offs).astype(np.int64, copy=False),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Persistence: ByteOffsetIndex -> sharded store directory
 # ---------------------------------------------------------------------------
@@ -157,14 +214,19 @@ def save_sharded(
     n_shards: int = 16,
     digest_bits: int = 64,
     bloom_bits_per_key: int = 12,
+    fingerprint_bits: Optional[int] = DEFAULT_FP_BITS,
 ) -> Dict[str, object]:
     """Partition ``index.entries`` into digest-range shards under ``root``.
 
-    Each shard gets sorted-digest data columns, a Bloom sidecar, and a
-    content hash in the manifest.  When ``root`` already holds a store built
-    with the same parameters, shards whose content hash is unchanged are
-    *not* rewritten — an incremental :func:`repro.core.index.update_index`
-    followed by ``save_sharded`` republishes only the shards it touched.
+    Each shard gets sorted-digest data columns, a Bloom sidecar, a packed
+    fingerprint plane (``fingerprint_bits`` wide; ``None`` disables the
+    similarity modality), and a content hash in the manifest.  When ``root``
+    already holds a store built with the same parameters, shards whose
+    content hash is unchanged are *not* rewritten — an incremental
+    :func:`repro.core.index.update_index` followed by ``save_sharded``
+    republishes only the shards it touched.  Fingerprints are a pure
+    function of the key text, so an unchanged content hash (which covers
+    the keys column) implies an unchanged fingerprint plane.
 
     Only primary entries are written (shadowed duplicate-key locations stay
     in the CSV truth, exactly like ``save_binary``).  Returns a summary:
@@ -172,6 +234,8 @@ def save_sharded(
     """
     if n_shards < 1 or (n_shards & (n_shards - 1)):
         raise ValueError(f"n_shards must be a power of two, got {n_shards}")
+    if fingerprint_bits is not None:
+        words_for(fingerprint_bits)  # validate width up front
     root = Path(root)
     root.mkdir(parents=True, exist_ok=True)
 
@@ -200,6 +264,9 @@ def save_sharded(
             # Bloom sizing must match too or a skipped shard would keep its
             # old bitmap under a new manifest bloom_k (false negatives)
             and old.get("bloom_bits_per_key") == bloom_bits_per_key
+            # the fingerprint plane is derived from the hashed keys column,
+            # so hash-equality extends to it only at the same bit width
+            and old.get("fingerprint_bits") == fingerprint_bits
             and old.get("file_names") == file_names
             and len(old.get("shards", ())) == n_shards
         ):
@@ -232,11 +299,16 @@ def save_sharded(
         stem = _shard_stem(s)
         paths = {c: root / f"{stem}.{c}.npy" for c in _COLUMNS}
         bloom_path = root / f"{stem}.bloom.npy"
+        fp_paths = (root / f"{stem}.fps.npy", root / f"{stem}.fpcounts.npy")
         unchanged = (
             old_shards is not None
             and old_shards[s].get("hash") == content
             and all(p.exists() for p in paths.values())
             and bloom_path.exists()
+            and (
+                fingerprint_bits is None
+                or all(p.exists() for p in fp_paths)
+            )
         )
         if unchanged:
             skipped += 1
@@ -249,6 +321,12 @@ def save_sharded(
                 bloom_path,
                 BloomFilter.build(d, bits_per_key=bloom_bits_per_key).bits,
             )
+            if fingerprint_bits is not None:
+                fps, fpc = fingerprint_batch(
+                    [keys[i] for i in members], fingerprint_bits
+                )
+                _atomic_save(fp_paths[0], fps)
+                _atomic_save(fp_paths[1], fpc)
             written += 1
         shards_meta.append(meta)
 
@@ -258,6 +336,7 @@ def save_sharded(
         "n_shards": n_shards,
         "digest_bits": digest_bits,
         "bloom_bits_per_key": bloom_bits_per_key,
+        "fingerprint_bits": fingerprint_bits,
         "n_entries": len(keys),
         "file_names": file_names,
         "shards": shards_meta,
@@ -268,10 +347,13 @@ def save_sharded(
     # drop shard files a previous layout left behind (republish with fewer
     # shards, crashed temp files) — unreachable through the new manifest
     # but they would inflate the on-disk footprint forever
+    sidecars = (*_COLUMNS, "bloom") + (
+        ("fps", "fpcounts") if fingerprint_bits is not None else ()
+    )
     expected = {
         f"{_shard_stem(s)}.{c}.npy"
         for s in range(n_shards)
-        for c in (*_COLUMNS, "bloom")
+        for c in sidecars
     }
     for p in root.glob("shard_*"):
         if p.name not in expected:
@@ -298,6 +380,8 @@ class QueryStats:
     bloom_false_positives: int = 0  # passed the filter, no digest in shard
     digest_probes: int = 0          # candidates probed against a digest column
     verify_collisions: int = 0      # equal digest, different key (scanned past)
+    similar_queries: int = 0        # fingerprint rows submitted to similar_batch
+    fp_rows_scanned: int = 0        # query x database row pairs Tanimoto-scored
     shards_touched: Set[int] = field(default_factory=set)
 
     def merge(self, other: "QueryStats") -> None:
@@ -308,6 +392,8 @@ class QueryStats:
         self.bloom_false_positives += other.bloom_false_positives
         self.digest_probes += other.digest_probes
         self.verify_collisions += other.verify_collisions
+        self.similar_queries += other.similar_queries
+        self.fp_rows_scanned += other.fp_rows_scanned
         self.shards_touched |= other.shards_touched
 
 
@@ -346,8 +432,15 @@ class IndexStore:
         self.digest_bits: int = int(manifest["digest_bits"])
         self.file_names: List[str] = list(manifest["file_names"])
         self._mmap = bool(mmap)
+        # None on stores published before the similarity modality (or with
+        # fingerprints disabled): similar_batch raises a clear error then
+        fp_bits = manifest.get("fingerprint_bits")
+        self.fingerprint_bits: Optional[int] = (
+            int(fp_bits) if fp_bits is not None else None
+        )
         self._shards: Dict[int, _Shard] = {}
         self._blooms: Dict[int, BloomFilter] = {}
+        self._fp_shards: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self.stats = QueryStats()
         # Concurrent lookup_batch callers (the service's scatter-gather
         # workers) race the lazy first-touch np.load of a shard and the
@@ -422,6 +515,38 @@ class IndexStore:
                                         int(self.manifest["shards"][s]["bloom_k"]))
                     self._blooms[s] = bloom
         return bloom
+
+    def _fp_shard(self, s: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Lazy mmap of shard ``s``'s ``(fps, fpcounts)`` fingerprint plane."""
+        pair = self._fp_shards.get(s)
+        if pair is None:
+            if self.fingerprint_bits is None:
+                raise ValueError(
+                    "store has no fingerprint plane (published with "
+                    "fingerprint_bits=None or by a pre-similarity builder); "
+                    "re-run save_sharded with fingerprint_bits set"
+                )
+            with self._load_lock:
+                pair = self._fp_shards.get(s)
+                if pair is None:
+                    count = int(self.manifest["shards"][s]["count"])
+                    w = words_for(self.fingerprint_bits)
+                    if count == 0:
+                        pair = (
+                            np.zeros((0, w), dtype=np.uint32),
+                            np.zeros(0, dtype=np.int32),
+                        )
+                    else:
+                        stem = _shard_stem(s)
+                        mode = "r" if self._mmap else None
+                        pair = (
+                            np.load(self.root / f"{stem}.fps.npy",
+                                    mmap_mode=mode),
+                            np.load(self.root / f"{stem}.fpcounts.npy",
+                                    mmap_mode=mode),
+                        )
+                    self._fp_shards[s] = pair
+        return pair
 
     def _bloom_filter_plane(self) -> Tuple[np.ndarray, ...]:
         """``(bits_concat, byte_off, m_mask, k)`` across all shards."""
@@ -695,6 +820,160 @@ class IndexStore:
                 delta.verify_collisions += 1  # digest collision
                 t += 1
 
+    # -- similarity modality ---------------------------------------------------
+
+    def fp_words(self) -> int:
+        """uint32 words per fingerprint row (raises without a plane)."""
+        if self.fingerprint_bits is None:
+            raise ValueError("store has no fingerprint plane")
+        return words_for(self.fingerprint_bits)
+
+    def _check_fps(self, fps: np.ndarray) -> np.ndarray:
+        fps = np.ascontiguousarray(fps, dtype=np.uint32)
+        if fps.ndim == 1:
+            fps = fps[None, :]
+        if fps.ndim != 2 or fps.shape[1] != self.fp_words():
+            raise ValueError(
+                f"query fingerprints must be (Q, {self.fp_words()}) uint32 "
+                f"(fingerprint_bits={self.fingerprint_bits}), got {fps.shape}"
+            )
+        return fps
+
+    @staticmethod
+    def _similar_probe(probe: Optional[str]) -> str:
+        if probe is None or probe == "auto":
+            return "device" if _tpu_backend_active() else "host"
+        if probe not in ("host", "device"):
+            raise ValueError(f"unknown probe backend {probe!r}")
+        return probe
+
+    def _similar_shard(
+        self,
+        s: int,
+        fps: np.ndarray,
+        k: int,
+        probe: str,
+        q_counts: np.ndarray,
+        delta: QueryStats,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Top-k of one shard's plane, rows mapped to ``(file_id, offset)``.
+
+        Within a shard ties break by row index (ascending digest order) —
+        the kernel/reference contract — which the cross-shard merge then
+        re-breaks on ``(file_id, offset)``; see :func:`merge_similar_topk`.
+        """
+        qn = fps.shape[0]
+        count = int(self.manifest["shards"][s]["count"])
+        if count == 0:
+            return (
+                np.full((qn, k), -1.0, dtype=np.float32),
+                np.full((qn, k), -1, dtype=np.int32),
+                np.full((qn, k), -1, dtype=np.int64),
+            )
+        db, dc = self._fp_shard(s)
+        delta.shards_touched.add(s)
+        delta.fp_rows_scanned += count * qn
+        if probe == "device":
+            from repro.kernels.tanimoto.ops import tanimoto_topk
+
+            scores, rows = tanimoto_topk(
+                fps, np.asarray(db), k,
+                q_counts=q_counts, db_counts=np.asarray(dc), use_pallas=True,
+            )
+        else:
+            from repro.kernels.tanimoto.ops import tanimoto_topk_host
+
+            scores, rows = tanimoto_topk_host(
+                fps, db, k, q_counts=q_counts, db_counts=dc
+            )
+        shard = self._shard(s)
+        valid = rows >= 0
+        r = np.where(valid, rows, 0)
+        fids = np.where(
+            valid, np.asarray(shard.file_ids)[r], np.int32(-1)
+        ).astype(np.int32, copy=False)
+        offs = np.where(
+            valid, np.asarray(shard.offsets)[r], np.int64(-1)
+        ).astype(np.int64, copy=False)
+        return scores, fids, offs
+
+    def similar_shard(
+        self,
+        s: int,
+        fps: np.ndarray,
+        k: int,
+        probe: Optional[str] = None,
+        q_counts: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One shard's ``(scores, file_ids, offsets)`` top-k (router scatter)."""
+        fps = self._check_fps(fps)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if not 0 <= s < self.n_shards:
+            raise ValueError(f"shard {s} out of range [0, {self.n_shards})")
+        qc = (
+            popcount_u32(fps).sum(axis=1, dtype=np.int32)
+            if q_counts is None else np.asarray(q_counts, dtype=np.int32)
+        )
+        delta = QueryStats()
+        out = self._similar_shard(
+            s, fps, k, self._similar_probe(probe), qc, delta
+        )
+        with self._stats_lock:
+            self.stats.merge(delta)
+        return out
+
+    def similar_batch(
+        self,
+        fps: np.ndarray,
+        k: int,
+        probe: Optional[str] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched Tanimoto top-k over every shard's fingerprint plane.
+
+        ``fps`` is ``(Q, W)`` uint32 (one packed query fingerprint per
+        row, e.g. :func:`repro.core.fingerprint.fold_fingerprint` output);
+        returns ``(scores (Q, k) float32, file_ids (Q, k) int32, offsets
+        (Q, k) int64)`` ordered by ``(score desc, file_id asc, offset
+        asc)``, padded with ``-1`` columns when the corpus holds fewer
+        than ``k`` rows.  ``probe`` selects the scoring backend exactly
+        like :meth:`lookup_batch`: ``"device"`` (Pallas kernel),
+        ``"host"`` (vectorized NumPy reference — byte-identical), or
+        ``None``/"auto".  Thread-safe like ``lookup_batch``.
+        """
+        fps = self._check_fps(fps)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        probe = self._similar_probe(probe)
+        qn = fps.shape[0]
+        delta = QueryStats(similar_queries=qn)
+        if qn == 0:
+            with self._stats_lock:
+                self.stats.merge(delta)
+            e = np.zeros((0, k))
+            return (
+                e.astype(np.float32),
+                e.astype(np.int32),
+                e.astype(np.int64),
+            )
+        qc = popcount_u32(fps).sum(axis=1, dtype=np.int32)
+        parts = [
+            self._similar_shard(s, fps, k, probe, qc, delta)
+            for s in range(self.n_shards)
+            if int(self.manifest["shards"][s]["count"]) > 0
+        ]
+        if not parts:
+            out = (
+                np.full((qn, k), -1.0, dtype=np.float32),
+                np.full((qn, k), -1, dtype=np.int32),
+                np.full((qn, k), -1, dtype=np.int64),
+            )
+        else:
+            out = merge_similar_topk(parts, k)
+        with self._stats_lock:
+            self.stats.merge(delta)
+        return out
+
     # -- ByteOffsetIndex-compatible read surface -------------------------------
 
     def locate_batch(
@@ -743,8 +1022,13 @@ class IndexStore:
         point of comparison is against the dict index, which is *all*
         resident *always*.
         """
-        return sum(sh.nbytes for sh in self._shards.values()) + sum(
-            bf.nbytes for bf in self._blooms.values()
+        return (
+            sum(sh.nbytes for sh in self._shards.values())
+            + sum(bf.nbytes for bf in self._blooms.values())
+            + sum(
+                int(fp.nbytes) + int(fc.nbytes)
+                for fp, fc in self._fp_shards.values()
+            )
         )
 
 

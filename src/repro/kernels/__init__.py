@@ -10,11 +10,14 @@ implementations off-TPU.
                         (the InChIKey role for on-device analytics).
 * ``sorted_probe``    — fence-partitioned membership probe against a sorted
                         digest table (the paper's index lookup, TPU-native).
+* ``tanimoto``        — batched Tanimoto top-k over packed fingerprint
+                        bit-planes (the similarity query modality).
 * ``flash_attention`` — causal/sliding-window GQA flash attention.
 * ``ssd_scan``        — Mamba2 SSD inter-chunk state recurrence.
 """
 
 from .hash_mix.ops import hash_mix, hash_mix_u64
 from .sorted_probe.ops import sorted_probe
+from .tanimoto.ops import tanimoto_topk
 from .flash_attention.ops import flash_attention
 from .ssd_scan.ops import ssd_scan

@@ -17,6 +17,13 @@ the naive per-key baseline for comparison.
 ``--skip-naive`` drops the baseline pass; ``--keys-per-request 1``
 measures the pure request-coalescing regime (each client request is a
 single key, so the entire win must come from cross-client batching).
+
+``--similarity`` switches the load to the second query modality: each
+client request is a batch of query fingerprints answered with
+``QueryService.similar`` (batched Tanimoto top-``--similar-k`` over the
+store's fingerprint planes, coalesced across clients), against a naive
+one-query-at-a-time baseline, with a parity gate asserting the service
+path matches per-query scoring exactly.
 """
 
 from __future__ import annotations
@@ -27,7 +34,10 @@ import sys
 import tempfile
 from pathlib import Path
 
+import numpy as np
+
 from repro.core import IndexStore, RecordStore, build_index, extract
+from repro.core.fingerprint import fingerprint_batch
 from repro.core.sdfgen import CorpusSpec, generate_corpus
 from repro.service import QueryService, ServiceConfig, run_closed_loop
 
@@ -76,6 +86,77 @@ def _demo_store(records: int, files: int, n_shards: int):
     return rstore, store_dir, spec
 
 
+def _similarity_load(svc, store_dir, keys, args) -> None:
+    """The ``--similarity`` closed-loop: batched Tanimoto vs per-query naive."""
+    bits = svc.router.fingerprint_bits
+    if bits is None:
+        raise SystemExit(
+            "store has no fingerprint plane — republish with "
+            "save_sharded(fingerprint_bits=...) to serve similarity"
+        )
+    k = args.similar_k
+    print(f"similarity mode: {bits}-bit fingerprints, top-{k} per query")
+    fps, _ = fingerprint_batch(keys, bits)
+    pool = list(fps)
+
+    if not args.skip_parity:
+        sample = fps[:: max(1, len(fps) // 64)][:64]
+        svc_out = svc.similar(sample, k)
+        ref_store = IndexStore.open(store_dir)
+        naive_out = [
+            ref_store.similar_batch(sample[i:i + 1], k, probe="host")
+            for i in range(len(sample))
+        ]
+        for col in range(3):
+            merged = np.concatenate([p[col] for p in naive_out], axis=0)
+            assert np.array_equal(svc_out[col], merged), (
+                "similarity parity failure: coalesced service results "
+                "differ from per-query scoring"
+            )
+        print(f"parity: svc.similar == per-query similar_batch on "
+              f"{len(sample)} queries ✓")
+
+    if not args.skip_naive:
+        naive_store = IndexStore.open(store_dir)
+        naive_store.similar_batch(fps[:1], k, probe="host")  # warm planes
+
+        def naive(rows):  # pre-batching contract: one scan per query
+            for r in rows:
+                naive_store.similar_batch(
+                    np.asarray(r)[None, :], k, probe="host"
+                )
+
+        rep_naive = run_closed_loop(
+            naive, pool, clients=args.clients, duration_s=args.seconds,
+            keys_per_request=args.keys_per_request,
+        )
+        print(f"naive  : {rep_naive.summary()}")
+
+    svc.similar(fps[: min(64, len(pool))], k)  # warm planes + batcher
+    rep_svc = run_closed_loop(
+        lambda rows: svc.similar(np.stack(rows), k), pool,
+        clients=args.clients, duration_s=args.seconds,
+        keys_per_request=args.keys_per_request,
+    )
+    print(f"service: {rep_svc.summary()}")
+    if not args.skip_naive:
+        print(f"speedup: {rep_svc.lookups_per_sec / max(rep_naive.lookups_per_sec, 1e-9):.2f}x "
+              f"sustained similarity queries/s vs naive per-query scans")
+
+    sim = svc.stats()["similarity"]
+    sched = sim["scheduler"] or {}
+    print(f"similarity: {sim['batches']} router batches / "
+          f"{sim['queries']} queries ({sim['scattered']} scattered, "
+          f"{sim['inline']} inline, {sim['shard_probes']} shard probes), "
+          f"{sim['fp_rows_scanned'] / 1e6:.1f}M row-pairs scored")
+    if sched:
+        print(f"scheduler: {sched['batches']} probes / "
+              f"{sched['requests']} requests, mean batch "
+              f"{sched['mean_batch_keys']:.1f} queries; latency "
+              f"p50={sched['latency_ms']['p50']:.2f}ms "
+              f"p99={sched['latency_ms']['p99']:.2f}ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--store", help="published store dir (save_sharded)")
@@ -92,6 +173,11 @@ def main():
     ap.add_argument("--seconds", type=float, default=2.0)
     ap.add_argument("--skip-naive", action="store_true")
     ap.add_argument("--skip-parity", action="store_true")
+    ap.add_argument("--similarity", action="store_true",
+                    help="drive the Tanimoto similarity modality instead "
+                         "of exact-key lookups")
+    ap.add_argument("--similar-k", type=int, default=8,
+                    help="top-k per similarity query (--similarity mode)")
     ap.add_argument("--reader-backend", default=None,
                     choices=["auto", "uring", "thread", "mmap", "serial"],
                     help="span I/O backend (default: REPRO_READER_BACKEND "
@@ -118,12 +204,18 @@ def main():
         max_wait_ms=args.max_wait_ms,
         reader_backend=args.reader_backend,
         reader_depth=args.reader_depth,
+        similar_top_k=max(32, args.similar_k),
     )
     svc = QueryService(rstore, store_dir, cfg)
     keys = sorted(svc.router.iter_keys())
     print(f"store: {len(svc):,} entries, {svc.router.n_shards} shards, "
           f"{args.replicas} replicas; load: {args.clients} closed-loop "
           f"clients x {args.keys_per_request} keys/request")
+
+    if args.similarity:
+        _similarity_load(svc, store_dir, keys, args)
+        svc.close()
+        return
 
     # parity gate: the service path must be byte-identical to the serial
     # reference before any throughput number means anything

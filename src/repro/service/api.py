@@ -25,6 +25,11 @@ matters: the bulk sweep must not evict the serving working set).
 ``fetch_async`` is the fully non-blocking variant: the probe rides the
 admission queue, the read phase runs on the service's pools, and the
 caller gets a future — end-to-end async through the MicroBatcher.
+``fetch_aio`` is the asyncio-native twin (awaitable probe, no parked
+thread).  ``similar``/``similar_async`` are the second query modality:
+batched Tanimoto top-k over the store's fingerprint planes, coalesced
+through their own MicroBatcher so concurrent similarity callers share
+shard scans the way lookup callers share probes.
 
 The service owns one long-lived span backend (io_uring rings persist
 across fetches; ``ServiceConfig.reader_backend``/``reader_depth``) and
@@ -37,12 +42,15 @@ dict the launcher and benchmarks report from.
 
 from __future__ import annotations
 
+import asyncio
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.core.cache import RecordCache
 from repro.core.extract import (
@@ -105,6 +113,11 @@ class ServiceConfig:
     # recompute + device digest compare when live), "vector", "process",
     # or the legacy per-record "string"/"digest" paths
     verify_backend: str = "auto"
+    # similarity: the fixed k every coalesced Tanimoto probe runs at.
+    # Per-call k <= this rides the shared batch (the top-k contract is
+    # prefix-stable: the top-j of a top-k probe IS the top-j); larger k
+    # bypasses the scheduler and probes alone.
+    similar_top_k: int = 32
 
 
 class QueryService:
@@ -164,6 +177,10 @@ class QueryService:
         self._orchestrator = ThreadPoolExecutor(
             max_workers=2, thread_name_prefix="svc-fetch"
         )
+        # similarity admission queue (lazy: a store without a fingerprint
+        # plane never pays the second batcher's watchdog thread)
+        self._similar_batcher: Optional[MicroBatcher] = None
+        self._similar_init_lock = threading.Lock()
         self.read_stats = ReadStats()
         self._read_stats_lock = threading.Lock()
         self._closed = False
@@ -220,6 +237,102 @@ class QueryService:
         hashed = self.key_mode == "hashed_key"
         keys = [hashed_key(t, key_bits) if hashed else t for t in targets]
         return assemble_plan(targets, keys, self.lookup(keys), sort_offsets)
+
+    # -- similarity surface (scheduler-coalesced Tanimoto) --------------------
+
+    def _similar_probe_fn(self, rows: Sequence[np.ndarray]):
+        """Batched probe for the similarity scheduler: stack the cohort's
+        query rows into one plane and scan every shard once for all of
+        them at the service-wide ``similar_top_k``."""
+        fps = np.stack([np.asarray(r, dtype=np.uint32) for r in rows])
+        return self.router.similar_batch(fps, self.config.similar_top_k)
+
+    def _similarity_batcher(self) -> MicroBatcher:
+        b = self._similar_batcher
+        if b is None:
+            if self.router.fingerprint_bits is None:
+                raise ValueError(
+                    "store has no fingerprint plane — republish with "
+                    "save_sharded(fingerprint_bits=...) to enable "
+                    "similarity queries"
+                )
+            with self._similar_init_lock:
+                b = self._similar_batcher
+                if b is None:
+                    b = MicroBatcher(
+                        self._similar_probe_fn,
+                        max_batch=self.config.max_batch,
+                        max_wait_ms=self.config.max_wait_ms,
+                    )
+                    self._similar_batcher = b
+        return b
+
+    def similar_async(
+        self, fps: np.ndarray, k: Optional[int] = None
+    ) -> "Future[Tuple[np.ndarray, np.ndarray, np.ndarray]]":
+        """Submit a similarity batch; resolves like :meth:`similar`.
+
+        The probe rides its own :class:`MicroBatcher` admission queue at
+        the fixed ``config.similar_top_k``, so concurrent small batches
+        coalesce into one shard scan exactly like lookups do; the
+        requested ``k`` is sliced off the shared result (top-k selection
+        is prefix-stable under the deterministic tie contract).  ``k``
+        larger than ``similar_top_k`` probes alone, uncoalesced.
+        """
+        k = self.config.similar_top_k if k is None else int(k)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        fps = np.ascontiguousarray(fps, dtype=np.uint32)
+        if fps.ndim == 1:
+            fps = fps[None, :]
+        if fps.shape[0] == 0:
+            out: "Future[Tuple[np.ndarray, np.ndarray, np.ndarray]]" = Future()
+            out.set_result((
+                np.zeros((0, k), dtype=np.float32),
+                np.zeros((0, k), dtype=np.int32),
+                np.zeros((0, k), dtype=np.int64),
+            ))
+            return out
+        if k > self.config.similar_top_k:
+            out: "Future[Tuple[np.ndarray, np.ndarray, np.ndarray]]" = Future()
+            if not out.set_running_or_notify_cancel():  # pragma: no cover
+                return out
+            try:
+                out.set_result(self.router.similar_batch(fps, k))
+            except BaseException as e:  # noqa: BLE001 — delivered to caller
+                out.set_exception(e)
+            return out
+        probe = self._similarity_batcher().submit(list(fps))
+        out = Future()
+
+        def _slice(pf: Future) -> None:
+            if not out.set_running_or_notify_cancel():  # pragma: no cover
+                return
+            try:
+                scores, fids, offs = pf.result()
+                out.set_result((scores[:, :k], fids[:, :k], offs[:, :k]))
+            except BaseException as e:  # noqa: BLE001
+                out.set_exception(e)
+
+        probe.add_done_callback(_slice)
+        return out
+
+    def similar(
+        self,
+        fps: np.ndarray,
+        k: Optional[int] = None,
+        timeout: Optional[float] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Blocking batched Tanimoto top-k through the admission queue.
+
+        ``fps`` is ``(Q, W)`` (or a single ``(W,)`` row) of packed uint32
+        query fingerprints (:func:`repro.core.fingerprint.fold_fingerprint`);
+        returns ``(scores (Q, k) f32, file_ids (Q, k) i32, offsets (Q, k)
+        i64)`` ordered by ``(score desc, file_id asc, offset asc)`` with
+        ``-1`` pads — the :meth:`IndexStore.similar_batch` contract,
+        coalesced across concurrent callers.
+        """
+        return self.similar_async(fps, k).result(timeout=timeout)
 
     # -- record surface (reader engine + shared cache) -----------------------
 
@@ -280,56 +393,11 @@ class QueryService:
                 return
             try:
                 fids, offs, hit = pf.result()
-                names = self.router.file_names
-                locs = [
-                    (names[fids[i]], int(offs[i])) if hit[i] else None
-                    for i in range(len(keys))
-                ]
-                plan, missing = assemble_plan(targets, keys, locs)
-                res = ExtractionResult()
-                res.missing = missing
-                res.plan_seconds = time.perf_counter() - t0
-                t1 = time.perf_counter()
-                stats = ReadStats()
-                found: Dict[str, str] = {}
-                for ev in stream_plan(
-                    self.records,
-                    plan,
-                    verify=do_verify,
-                    workers=(self.config.read_workers
-                             if workers is None else workers),
-                    coalesce_gap=self.config.coalesce_gap,
-                    span_guess=self.config.span_guess,
-                    cache=self.cache,
-                    stats=stats,
-                    executor=self.read_executor,
-                    backend=self.read_backend,
-                    depth=self.config.reader_depth,
-                    verifier=self.verifier,
-                ):
-                    res.seeks += 1
-                    if ev.ok:
-                        found[ev.full_id] = ev.text
-                    else:
-                        res.mismatches.append(Mismatch(
-                            ev.full_id, ev.found_id, ev.file, ev.offset, ev.key
-                        ))
-                res.records = {t: found[t] for t in targets if t in found}
-                res.mismatches.sort(
-                    key=lambda m: (m.file, m.offset, m.expected_id)
-                )
-                res.files_opened = stats.files_opened
-                res.bytes_read = stats.bytes_read
-                res.spans_read = stats.spans_read
-                res.cache_hits = stats.cache_hits
-                res.read_backend = stats.backend
-                res.inflight_peak = stats.inflight_peak
-                res.verify_batches = stats.verify_batches
-                res.verify_records = stats.verify_records
-                res.verify_batch_max = stats.verify_batch_max
-                res.read_seconds = time.perf_counter() - t1
-                self._merge_read(res)
-                out.set_result(res)
+                locs = self._locations(fids, offs, hit)
+                out.set_result(self._read_plan(
+                    targets, keys, locs, do_verify, workers,
+                    plan_seconds=time.perf_counter() - t0,
+                ))
             except BaseException as e:
                 out.set_exception(e)
 
@@ -338,6 +406,108 @@ class QueryService:
             lambda pf: self._orchestrator.submit(read_phase, pf)
         )
         return out
+
+    async def fetch_aio(
+        self,
+        targets: Sequence[str],
+        verify: Optional[bool] = None,
+        key_bits: int = 64,
+        workers: Optional[int] = None,
+    ) -> ExtractionResult:
+        """asyncio-native :meth:`fetch` — identical result object.
+
+        Unlike :meth:`fetch_async` (which parks the whole request on the
+        orchestrator pool), this coroutine awaits the coalesced probe
+        with no thread parked anywhere (``asyncio.wrap_future`` bridges
+        the MicroBatcher future to the event loop); only the span-read
+        phase — actual blocking syscalls — occupies an executor slot,
+        and the coroutine awaits that too, so the event loop stays free
+        throughout.  Submit many of these concurrently and the probes
+        coalesce into shared batches exactly like ``fetch_async``'s.
+        """
+        do_verify = self.config.verify if verify is None else verify
+        hashed = self.key_mode == "hashed_key"
+        targets = list(targets)
+        keys = [hashed_key(t, key_bits) if hashed else t for t in targets]
+        t0 = time.perf_counter()
+        fids, offs, hit = await asyncio.wrap_future(
+            self.batcher.submit(keys)
+        )
+        locs = self._locations(fids, offs, hit)
+        plan_seconds = time.perf_counter() - t0
+        loop = asyncio.get_running_loop()
+        return await loop.run_in_executor(
+            self._orchestrator,
+            lambda: self._read_plan(
+                targets, keys, locs, do_verify, workers,
+                plan_seconds=plan_seconds,
+            ),
+        )
+
+    def _locations(
+        self, fids, offs, hit
+    ) -> List[Optional[Tuple[str, int]]]:
+        names = self.router.file_names
+        return [
+            (names[fids[i]], int(offs[i])) if hit[i] else None
+            for i in range(len(hit))
+        ]
+
+    def _read_plan(
+        self,
+        targets: List[str],
+        keys: List[str],
+        locs: List[Optional[Tuple[str, int]]],
+        do_verify: bool,
+        workers: Optional[int],
+        plan_seconds: float,
+    ) -> ExtractionResult:
+        """The blocking span-read phase shared by fetch_async/fetch_aio."""
+        plan, missing = assemble_plan(targets, keys, locs)
+        res = ExtractionResult()
+        res.missing = missing
+        res.plan_seconds = plan_seconds
+        t1 = time.perf_counter()
+        stats = ReadStats()
+        found: Dict[str, str] = {}
+        for ev in stream_plan(
+            self.records,
+            plan,
+            verify=do_verify,
+            workers=(self.config.read_workers
+                     if workers is None else workers),
+            coalesce_gap=self.config.coalesce_gap,
+            span_guess=self.config.span_guess,
+            cache=self.cache,
+            stats=stats,
+            executor=self.read_executor,
+            backend=self.read_backend,
+            depth=self.config.reader_depth,
+            verifier=self.verifier,
+        ):
+            res.seeks += 1
+            if ev.ok:
+                found[ev.full_id] = ev.text
+            else:
+                res.mismatches.append(Mismatch(
+                    ev.full_id, ev.found_id, ev.file, ev.offset, ev.key
+                ))
+        res.records = {t: found[t] for t in targets if t in found}
+        res.mismatches.sort(
+            key=lambda m: (m.file, m.offset, m.expected_id)
+        )
+        res.files_opened = stats.files_opened
+        res.bytes_read = stats.bytes_read
+        res.spans_read = stats.spans_read
+        res.cache_hits = stats.cache_hits
+        res.read_backend = stats.backend
+        res.inflight_peak = stats.inflight_peak
+        res.verify_batches = stats.verify_batches
+        res.verify_records = stats.verify_records
+        res.verify_batch_max = stats.verify_batch_max
+        res.read_seconds = time.perf_counter() - t1
+        self._merge_read(res)
+        return res
 
     def fetch_stream(
         self,
@@ -409,6 +579,27 @@ class QueryService:
                 "verify_collisions": qs.verify_collisions,
                 "shards_touched": len(qs.shards_touched),
             },
+            "similarity": {
+                "fingerprint_bits": self.router.fingerprint_bits,
+                "batches": rs.similar_batches,
+                "queries": rs.similar_queries,
+                "scattered": rs.similar_scattered,
+                "inline": rs.similar_inline,
+                "shard_probes": rs.similar_shard_probes,
+                "fp_rows_scanned": qs.fp_rows_scanned,
+                "scheduler": (
+                    {
+                        "requests": sim.stats.requests,
+                        "batches": sim.stats.batches,
+                        "mean_batch_keys": sim.stats.mean_batch_keys,
+                        "coalesced_batches": sim.stats.coalesced_batches,
+                        "coalesced_requests": sim.stats.coalesced_requests,
+                        "latency_ms": sim.latency_ms(),
+                    }
+                    if (sim := self._similar_batcher) is not None
+                    else None
+                ),
+            },
             "scheduler": {
                 "requests": ss.requests,
                 "keys": ss.keys,
@@ -459,6 +650,8 @@ class QueryService:
             return
         self._closed = True
         self.batcher.close(drain=drain)
+        if self._similar_batcher is not None:
+            self._similar_batcher.close(drain=drain)
         self._orchestrator.shutdown(wait=drain, cancel_futures=not drain)
         self.read_executor.shutdown(wait=False, cancel_futures=True)
         self.read_backend.close()

@@ -35,7 +35,14 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.store import IndexStore, QueryStats, digest_u64, shard_of
+from repro.core.fingerprint import popcount_u32
+from repro.core.store import (
+    IndexStore,
+    QueryStats,
+    digest_u64,
+    merge_similar_topk,
+    shard_of,
+)
 
 __all__ = ["RouterStats", "ShardRouter"]
 
@@ -56,6 +63,13 @@ class RouterStats:
     scattered: int = 0       # batches fanned out across the worker pool
     inline: int = 0          # batches probed inline on one replica
     shard_probes: int = 0    # per-shard probe tasks executed (scattered only)
+    # similarity traffic (full-scan modality: every batch touches every
+    # shard, so the scatter unit is the shard, not a key partition)
+    similar_batches: int = 0
+    similar_queries: int = 0        # query fingerprints routed
+    similar_scattered: int = 0      # batches fanned out shard-per-task
+    similar_inline: int = 0         # batches served whole on one replica
+    similar_shard_probes: int = 0   # per-shard similarity tasks executed
     # shard traffic of scattered batches (inline batches skip partitioning
     # in the router entirely — the replica routes internally; its
     # QueryStats carry the per-shard truth)
@@ -105,6 +119,7 @@ class ShardRouter:
         self.key_mode: str = first.key_mode
         self.n_shards: int = first.n_shards
         self.digest_bits: int = first.digest_bits
+        self.fingerprint_bits: Optional[int] = first.fingerprint_bits
         self.file_names: List[str] = first.file_names
         self._free: "queue.SimpleQueue[IndexStore]" = queue.SimpleQueue()
         for st in self._stores:
@@ -206,6 +221,59 @@ class ShardRouter:
             offsets[sel] = goff
             hit[sel] = ghit
         return file_ids, offsets, hit
+
+    # -- similarity scatter-gather -------------------------------------------
+
+    def similar_batch(
+        self, fps: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched Tanimoto top-k: scatter shards, gather, merge.
+
+        Result contract is exactly :meth:`IndexStore.similar_batch` —
+        ``(scores, file_ids, offsets)`` each ``(Q, k)``, ordered ``(score
+        desc, file_id asc, offset asc)`` with ``-1`` pads.  Similarity is
+        a full scan of every shard's plane (no digest routing to narrow
+        the fan-out), so with multiple replicas each shard's scan becomes
+        one pool task and the per-shard top-k candidates merge through
+        the same :func:`merge_similar_topk` the store uses inline —
+        identical results by construction, just overlapped.
+        """
+        if self._closed:
+            raise RuntimeError("router is closed")
+        first = self._stores[0]
+        fps = first._check_fps(fps)
+        qn = fps.shape[0]
+        live = [
+            s for s in range(self.n_shards)
+            if int(first.manifest["shards"][s]["count"]) > 0
+        ]
+        scatter = len(self._stores) > 1 and len(live) > 1 and qn > 0
+        with self._stats_lock:
+            self.stats.similar_batches += 1
+            self.stats.similar_queries += qn
+            if scatter:
+                self.stats.similar_scattered += 1
+                self.stats.similar_shard_probes += len(live)
+            else:
+                self.stats.similar_inline += 1
+
+        if not scatter:
+            with self._replica() as st:
+                return st.similar_batch(fps, k, probe=self.probe)
+
+        qc = popcount_u32(fps).sum(axis=1, dtype=np.int32)  # once per batch
+
+        def probe_shard(s: int):
+            with self._replica() as st:
+                return st.similar_shard(
+                    s, fps, k, probe=self.probe, q_counts=qc
+                )
+
+        futs = [self._pool.submit(probe_shard, s) for s in live]
+        # merge_similar_topk is order-insensitive (it re-sorts on the
+        # global tie contract), so gather in completion order
+        parts = [f.result() for f in as_completed(futs)]
+        return merge_similar_topk(parts, k)
 
     # -- convenience + stats -------------------------------------------------
 
