@@ -57,6 +57,10 @@ def _report(rep) -> Dict[str, float]:
         "lookups_per_sec": rep.lookups_per_sec,
         "p50_ms": rep.p50_ms,
         "p99_ms": rep.p99_ms,
+        # failed = raised to the client; degraded = served partial results
+        # (any nonzero here on a fault-free run means the gate is broken)
+        "failed": rep.failed,
+        "degraded": rep.degraded,
         "errors": rep.errors,
     }
 

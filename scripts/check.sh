@@ -184,6 +184,95 @@ with QueryService(store, sdir, ServiceConfig(replicas=2)) as svc:
           f"(mean {sch['mean_batch_keys']:.1f} keys)")
 PY
 
+echo "== chaos smoke: closed-loop load with a shard killed mid-run =="
+python - <<'PY'
+import tempfile, threading, time
+import numpy as np
+from pathlib import Path
+from repro.core import RecordStore, build_index
+from repro.core.sdfgen import CorpusSpec, generate_corpus
+from repro.core.store import IndexStore, digest_u64, shard_of
+from repro.runtime.fault import BackoffPolicy
+from repro.service import (
+    FaultInjectingTransport, LocalTransport, QueryService, ServiceConfig,
+    ShardRouter, run_closed_loop,
+)
+
+spec = CorpusSpec(n_files=3, records_per_file=500)
+root = Path(tempfile.mkdtemp()) / "c"
+generate_corpus(root, spec)
+store = RecordStore(root)
+idx = build_index(store, key_mode="full_id")
+sdir = root.parent / "istore"
+idx.save_sharded(sdir, n_shards=8)
+
+injectors = []
+def factory(st, i):
+    tr = FaultInjectingTransport(LocalTransport(st, name=f"r{i}"), seed=42 + i)
+    injectors.append(tr)
+    return tr
+
+router = ShardRouter(
+    sdir, replicas=2, min_scatter_keys=1, transport_factory=factory,
+    probe_timeout_ms=250.0, fail_threshold=2,
+    health_backoff=BackoffPolicy(base_s=0.1, cap_s=0.5),
+)
+keys = sorted(IndexStore.open(sdir).iter_keys())
+dead_shard = 3
+with QueryService(store, router, ServiceConfig(replicas=2)) as svc:
+    svc.lookup_batch(keys[:500])  # warm
+
+    def chaos():  # kill one shard range mid-run, revive before the end
+        time.sleep(0.2)
+        for tr in injectors:
+            tr.kill(shard=dead_shard)
+        time.sleep(0.4)
+        for tr in injectors:
+            tr.revive(shard=dead_shard)
+    driver = threading.Thread(target=chaos)
+    driver.start()
+    rep = run_closed_loop(
+        lambda ks: svc.lookup_batch(ks), keys, clients=6, duration_s=1.0,
+        keys_per_request=8,
+        classify=lambda r: bool(r.degraded.any()),
+        counters_fn=lambda: {
+            k: float(v) for k, v in svc.stats()["fault"].items()
+            if isinstance(v, (int, float))
+        },
+    )
+    driver.join()
+    # 1) the outage never surfaced as a client error — only degraded masks
+    assert rep.errors == 0, f"{rep.errors} client errors during chaos"
+    assert rep.degraded > 0, "kill window produced no degraded responses"
+    # 2) the degraded mask is exactly the killed shard's key range
+    sid = shard_of(digest_u64(keys), router.n_shards, router.digest_bits)
+    for tr in injectors:
+        tr.kill(shard=dead_shard)
+    res = svc.lookup_batch(keys)
+    assert np.array_equal(res.degraded, sid == dead_shard), "bad miss mask"
+    assert res.hit[sid != dead_shard].all(), "healthy shards lost keys"
+    for tr in injectors:
+        tr.revive(shard=dead_shard)
+    # 3) parity restored within the recovery budget after revival
+    ref = IndexStore.open(sdir).lookup_batch(keys)
+    deadline = time.monotonic() + 10.0
+    res = svc.lookup_batch(keys)
+    while res.degraded.any() and time.monotonic() < deadline:
+        time.sleep(0.1)
+        res = svc.lookup_batch(keys)
+    assert not res.degraded.any(), "shard still degraded 10s after revival"
+    for got, want in zip((res.file_ids, res.offsets, res.hit), ref):
+        assert np.array_equal(got, want), "post-revival parity broken"
+    snap = svc.stats()["health"]
+    print(f"chaos smoke OK: {rep.requests} requests, 0 failed, "
+          f"{rep.degraded} degraded during the kill window, "
+          f"{int(rep.counters.get('retries', 0))} retries, "
+          f"{snap['revivals']} revivals "
+          f"(last recovery {snap['last_recovery_s']:.2f}s), "
+          f"post-revival parity on {len(keys)} keys")
+router.close()
+PY
+
 echo "== similarity smoke: Tanimoto kernel (interpret) vs oracle =="
 python - <<'PY'
 import numpy as np

@@ -24,6 +24,16 @@ client request is a batch of query fingerprints answered with
 store's fingerprint planes, coalesced across clients), against a naive
 one-query-at-a-time baseline, with a parity gate asserting the service
 path matches per-query scoring exactly.
+
+``--chaos`` wraps every replica endpoint in a seeded
+:class:`~repro.service.transport.FaultInjectingTransport` and drives the
+closed-loop load through injected faults: a shard killed on every
+replica mid-run (``--chaos-kill-shard`` / ``--chaos-kill-at``), revived
+later (``--chaos-revive-at``), optional per-shard latency spikes
+(``--chaos-latency-shard`` / ``--chaos-latency-ms``) and transient error
+rates (``--chaos-flaky-rate``).  The report separates failed vs degraded
+requests, shows hedges fired / retries / per-shard error taxonomy, and
+gates on full post-revival parity against a clean store.
 """
 
 from __future__ import annotations
@@ -32,6 +42,8 @@ import argparse
 import os
 import sys
 import tempfile
+import threading
+import time
 from pathlib import Path
 
 import numpy as np
@@ -39,7 +51,15 @@ import numpy as np
 from repro.core import IndexStore, RecordStore, build_index, extract
 from repro.core.fingerprint import fingerprint_batch
 from repro.core.sdfgen import CorpusSpec, generate_corpus
-from repro.service import QueryService, ServiceConfig, run_closed_loop
+from repro.runtime.fault import BackoffPolicy
+from repro.service import (
+    FaultInjectingTransport,
+    LocalTransport,
+    QueryService,
+    ServiceConfig,
+    ShardRouter,
+    run_closed_loop,
+)
 
 # places distros drop tcmalloc; probed in order, first hit wins
 _TCMALLOC_CANDIDATES = (
@@ -157,6 +177,115 @@ def _similarity_load(svc, store_dir, keys, args) -> None:
               f"p99={sched['latency_ms']['p99']:.2f}ms")
 
 
+def _chaos_load(svc, injectors, store_dir, keys, args) -> None:
+    """The ``--chaos`` closed-loop: injected faults under live load.
+
+    The invariants this run demonstrates (and asserts):
+
+    * clients see ZERO exceptions — a dead shard range degrades, it does
+      not fail the request;
+    * degraded responses carry the per-key ``degraded`` mask, so callers
+      can distinguish "absent" from "unknown";
+    * after the revive point, full parity with a clean store returns
+      within the recovery window (health probation + backoff).
+    """
+    rt = svc.router
+    print(
+        f"chaos: seed {args.chaos_seed}; kill shard {args.chaos_kill_shard} "
+        f"on every replica at t+{args.chaos_kill_at:.1f}s, revive at "
+        f"t+{args.chaos_revive_at:.1f}s"
+        + (f"; +{args.chaos_latency_ms:.0f}ms latency on shard "
+           f"{args.chaos_latency_shard}"
+           if args.chaos_latency_shard is not None else "")
+        + (f"; flaky rate {args.chaos_flaky_rate:.0%}"
+           if args.chaos_flaky_rate > 0 else "")
+    )
+    if args.chaos_latency_shard is not None:
+        for tr in injectors:
+            tr.set_latency(
+                args.chaos_latency_ms,
+                jitter_ms=args.chaos_latency_ms / 3,
+                shard=args.chaos_latency_shard,
+            )
+    if args.chaos_flaky_rate > 0:
+        for tr in injectors:
+            tr.set_error_rate(args.chaos_flaky_rate)
+
+    svc.lookup_batch(keys[: min(2000, len(keys))])  # warm
+
+    events = []
+
+    def driver():
+        t0 = time.perf_counter()
+        time.sleep(args.chaos_kill_at)
+        for tr in injectors:
+            tr.kill(shard=args.chaos_kill_shard)
+        events.append(("kill", time.perf_counter() - t0))
+        time.sleep(max(0.0, args.chaos_revive_at - args.chaos_kill_at))
+        for tr in injectors:
+            tr.revive(shard=args.chaos_kill_shard)
+        events.append(("revive", time.perf_counter() - t0))
+
+    th = threading.Thread(target=driver, daemon=True)
+    th.start()
+    rep = run_closed_loop(
+        lambda ks: svc.lookup_batch(ks), keys,
+        clients=args.clients, duration_s=args.seconds,
+        keys_per_request=args.keys_per_request,
+        classify=lambda r: bool(r.degraded.any()),
+        counters_fn=lambda: {
+            "hedges_fired": rt.stats.hedges_fired,
+            "hedge_wins": rt.stats.hedge_wins,
+            "retries": rt.stats.retries,
+            "probes_failed": rt.stats.probes_failed,
+            "degraded_keys": rt.stats.degraded_keys,
+        },
+    )
+    th.join(timeout=args.chaos_revive_at + 10)
+    print(f"service: {rep.summary()}")
+    c = rep.counters
+    print(
+        f"chaos:   {rep.errors} failed / {rep.degraded} degraded of "
+        f"{rep.requests} requests; hedges {c.get('hedges_fired', 0)} "
+        f"(won {c.get('hedge_wins', 0)}), retries {c.get('retries', 0)}, "
+        f"probes failed {c.get('probes_failed', 0)}, degraded keys "
+        f"{c.get('degraded_keys', 0)}"
+    )
+    errs = rt.stats.errors_per_shard
+    if errs:
+        print("chaos:   error taxonomy per shard: "
+              + ", ".join(f"s{s}={dict(e)}" for s, e in sorted(errs.items())))
+    assert rep.errors == 0, (
+        f"{rep.errors} requests raised to clients — degraded mode must "
+        f"return partial results, not exceptions"
+    )
+
+    # recovery gate: full parity with a clean store within the window
+    sample = keys[:: max(1, len(keys) // 500)]
+    ref = IndexStore.open(store_dir)
+    want = ref.lookup_batch(sample)
+    t_revive = time.perf_counter()
+    deadline = t_revive + args.chaos_recovery_s
+    got = svc.lookup_batch(sample)
+    while got.degraded.any() and time.perf_counter() < deadline:
+        time.sleep(0.2)
+        got = svc.lookup_batch(sample)
+    recovered_in = time.perf_counter() - t_revive
+    assert not got.degraded.any(), (
+        f"degraded responses persisted {args.chaos_recovery_s:.0f}s after "
+        f"revival"
+    )
+    for a, b in zip((got.file_ids, got.offsets, got.hit), want):
+        assert np.array_equal(a, b), "post-revival results differ from clean store"
+    snap = rt.health.snapshot()
+    print(
+        f"chaos:   post-revival parity on {len(sample)} keys ✓ "
+        f"(re-probed clean {recovered_in:.2f}s after revive; "
+        f"{snap['revivals']} domain revivals, last recovery "
+        f"{snap['last_recovery_s']:.2f}s)"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--store", help="published store dir (save_sharded)")
@@ -178,6 +307,24 @@ def main():
                          "of exact-key lookups")
     ap.add_argument("--similar-k", type=int, default=8,
                     help="top-k per similarity query (--similarity mode)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="wrap replicas in fault-injecting transports and "
+                         "drive the load through a kill/revive cycle")
+    ap.add_argument("--chaos-kill-shard", type=int, default=0,
+                    help="shard hard-downed on every replica mid-run")
+    ap.add_argument("--chaos-kill-at", type=float, default=0.5,
+                    help="seconds into the run when the shard dies")
+    ap.add_argument("--chaos-revive-at", type=float, default=1.2,
+                    help="seconds into the run when the shard revives")
+    ap.add_argument("--chaos-latency-shard", type=int, default=None,
+                    help="shard given an injected latency spike from t0")
+    ap.add_argument("--chaos-latency-ms", type=float, default=30.0)
+    ap.add_argument("--chaos-flaky-rate", type=float, default=0.0,
+                    help="transient per-probe error rate on every shard")
+    ap.add_argument("--chaos-seed", type=int, default=42)
+    ap.add_argument("--chaos-recovery-s", type=float, default=10.0,
+                    help="post-revival window in which full parity must "
+                         "return")
     ap.add_argument("--reader-backend", default=None,
                     choices=["auto", "uring", "thread", "mmap", "serial"],
                     help="span I/O backend (default: REPRO_READER_BACKEND "
@@ -206,7 +353,31 @@ def main():
         reader_depth=args.reader_depth,
         similar_top_k=max(32, args.similar_k),
     )
-    svc = QueryService(rstore, store_dir, cfg)
+    injectors = []
+    if args.chaos:
+        # chaos serving posture: wrap each replica endpoint, keep probe
+        # deadlines tight and the dead-replica backoff short so the
+        # kill/revive cycle resolves inside the run window
+        def chaos_factory(st, i):
+            tr = FaultInjectingTransport(
+                LocalTransport(st, name=f"replica{i}"),
+                seed=args.chaos_seed + i,
+            )
+            injectors.append(tr)
+            return tr
+
+        router = ShardRouter(
+            store_dir,
+            replicas=args.replicas,
+            min_scatter_keys=cfg.min_scatter_keys,
+            transport_factory=chaos_factory,
+            probe_timeout_ms=250.0,
+            fail_threshold=2,
+            health_backoff=BackoffPolicy(base_s=0.2, cap_s=1.0),
+        )
+        svc = QueryService(rstore, router, cfg)
+    else:
+        svc = QueryService(rstore, store_dir, cfg)
     keys = sorted(svc.router.iter_keys())
     print(f"store: {len(svc):,} entries, {svc.router.n_shards} shards, "
           f"{args.replicas} replicas; load: {args.clients} closed-loop "
@@ -215,6 +386,12 @@ def main():
     if args.similarity:
         _similarity_load(svc, store_dir, keys, args)
         svc.close()
+        return
+
+    if args.chaos:
+        _chaos_load(svc, injectors, store_dir, keys, args)
+        svc.close()
+        router.close()  # chaos router is launcher-owned, not service-owned
         return
 
     # parity gate: the service path must be byte-identical to the serial

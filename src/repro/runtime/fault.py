@@ -23,12 +23,19 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Tuple
 
-__all__ = ["Heartbeat", "FailureDetector", "ElasticPlan", "run_with_failures"]
+__all__ = [
+    "BackoffPolicy",
+    "ElasticPlan",
+    "FailureDetector",
+    "Heartbeat",
+    "run_with_failures",
+]
 
 
 class Heartbeat:
@@ -37,9 +44,21 @@ class Heartbeat:
         self.rank = rank
 
     def beat(self, step: int) -> None:
-        tmp = self.path.with_suffix(".tmp")
-        tmp.write_text(json.dumps({"step": step, "t": time.time()}))
-        os.replace(tmp, self.path)
+        # with_name, not with_suffix: suffix replacement rewrites anything
+        # after the last dot of the final component, so a dotted file name
+        # would lose part of its rank; and the tmp name carries the pid AND
+        # thread ident so neither two processes nor two pool threads beating
+        # the same rank ever interleave writes into one tmp file
+        # (os.replace keeps the publish itself atomic).
+        tmp = self.path.with_name(
+            f"{self.path.name}.{os.getpid()}.{threading.get_ident()}.tmp"
+        )
+        try:
+            tmp.write_text(json.dumps({"step": step, "t": time.time()}))
+            os.replace(tmp, self.path)
+        except BaseException:
+            tmp.unlink(missing_ok=True)
+            raise
 
     def read(self) -> Optional[dict]:
         try:
@@ -68,6 +87,27 @@ class FailureDetector:
     def dead(self) -> List[int]:
         a = set(self.alive())
         return [r for r in range(self.n_workers) if r not in a]
+
+
+@dataclass(frozen=True)
+class BackoffPolicy:
+    """Exponential backoff schedule (dead-replica re-probe, retry waits).
+
+    ``delay(attempt)`` is ``base_s * multiplier**attempt`` capped at
+    ``cap_s`` — attempt 0 is the first wait after the failure that opened
+    the backoff window.  Shared by the serving tier's
+    :class:`~repro.service.health.HealthTracker` (how long a dead replica
+    stays unprobed) and any coordinator that wants paced re-admission.
+    """
+
+    base_s: float = 0.2
+    multiplier: float = 2.0
+    cap_s: float = 5.0
+
+    def delay(self, attempt: int) -> float:
+        if attempt < 0:
+            raise ValueError(f"attempt must be >= 0, got {attempt}")
+        return float(min(self.cap_s, self.base_s * self.multiplier ** attempt))
 
 
 @dataclass(frozen=True)
@@ -113,6 +153,13 @@ def run_with_failures(
     step = 0
     pending = dict(fail_at)
     while step < total_steps:
+        # a failure scheduled at the current step (including step 0, before
+        # any training has run) applies before the next chunk launches —
+        # the chunk must already see the reduced dp extent
+        if step in pending:
+            lost = pending.pop(step)
+            n_dp = max(1, n_dp - lost)
+            log.record(kind="failure", at=step, lost=lost, new_dp=n_dp)
         # next failure boundary in this chunk (if any)
         upcoming = sorted(s for s in pending if s > step)
         until = min([total_steps] + upcoming)
@@ -120,8 +167,4 @@ def run_with_failures(
         log.record(kind="chunk", start=step, until=until, reached=reached,
                    n_dp=n_dp, **info)
         step = reached
-        if step in pending:
-            lost = pending.pop(step)
-            n_dp = max(1, n_dp - lost)
-            log.record(kind="failure", at=step, lost=lost, new_dp=n_dp)
     return log

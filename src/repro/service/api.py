@@ -72,11 +72,21 @@ from repro.core.reader import (
 from repro.core.records import RecordStore
 from repro.core.verify import VerifyBatcher
 
-from .router import DEFAULT_MIN_SCATTER_KEYS, DEFAULT_REPLICAS, ShardRouter
+from repro.runtime.fault import BackoffPolicy
+
+from .router import (
+    DEFAULT_HEDGE_FLOOR_MS,
+    DEFAULT_MAX_ATTEMPTS,
+    DEFAULT_MIN_SCATTER_KEYS,
+    DEFAULT_PROBE_TIMEOUT_MS,
+    DEFAULT_REPLICAS,
+    LookupBatchResult,
+    ShardRouter,
+    SimilarResult,
+)
 from .scheduler import (
     DEFAULT_MAX_BATCH,
     DEFAULT_MAX_WAIT_MS,
-    BatchResult,
     MicroBatcher,
 )
 
@@ -118,6 +128,17 @@ class ServiceConfig:
     # prefix-stable: the top-j of a top-k probe IS the top-j); larger k
     # bypasses the scheduler and probes alone.
     similar_top_k: int = 32
+    # fault tolerance (router probe deadlines / failover / hedging —
+    # active when transports are chaotic or a failure domain degrades)
+    probe_timeout_ms: float = DEFAULT_PROBE_TIMEOUT_MS
+    probe_attempts: int = DEFAULT_MAX_ATTEMPTS   # total tries per shard probe
+    hedge: bool = True
+    hedge_floor_ms: float = DEFAULT_HEDGE_FLOOR_MS
+    hedge_factor: float = 1.0
+    fail_threshold: int = 3        # consecutive failures before "dead"
+    backoff_base_s: float = 0.2    # dead-replica re-probe schedule
+    backoff_cap_s: float = 5.0
+    health_dir: Optional[str] = None  # heartbeat files for the detector
 
 
 class QueryService:
@@ -149,14 +170,27 @@ class QueryService:
                 probe=self.config.probe,
                 min_scatter_keys=self.config.min_scatter_keys,
                 preload_digests=self.config.preload_digests,
+                probe_timeout_ms=self.config.probe_timeout_ms,
+                max_attempts=self.config.probe_attempts,
+                hedge=self.config.hedge,
+                hedge_floor_ms=self.config.hedge_floor_ms,
+                hedge_factor=self.config.hedge_factor,
+                fail_threshold=self.config.fail_threshold,
+                health_backoff=BackoffPolicy(
+                    base_s=self.config.backoff_base_s,
+                    cap_s=self.config.backoff_cap_s,
+                ),
+                health_dir=self.config.health_dir,
             )
             self._owns_router = True
         self.cache = cache if cache is not None else RecordCache(
             capacity=self.config.cache_records,
             max_bytes=self.config.cache_bytes,
         )
+        # the coalesced probe rides the _ex contract so the per-key
+        # degraded mask scatters back with each request's rows
         self.batcher = MicroBatcher(
-            self.router.lookup_batch,
+            self.router.lookup_batch_ex,
             max_batch=self.config.max_batch,
             max_wait_ms=self.config.max_wait_ms,
         )
@@ -196,23 +230,28 @@ class QueryService:
 
     # -- lookup surface (scheduler-coalesced) --------------------------------
 
-    def lookup_async(self, keys: Sequence[str]) -> "Future[BatchResult]":
-        """Submit a raw lookup; resolves to ``(file_ids, offsets, hit)``."""
+    def lookup_async(
+        self, keys: Sequence[str]
+    ) -> "Future[LookupBatchResult]":
+        """Submit a raw lookup; resolves to ``(file_ids, offsets, hit,
+        degraded)`` — the fault-tolerant batch contract."""
         return self.batcher.submit(keys)
 
     def lookup_batch(
         self, keys: Sequence[str], timeout: Optional[float] = None
-    ) -> BatchResult:
-        """The IndexStore batch contract, micro-batched: raw
-        ``(file_ids, offsets, hit_mask)`` with no per-key boxing — the
-        hot serving surface (``lookup`` builds name tuples on top)."""
+    ) -> LookupBatchResult:
+        """The fault-tolerant batch contract, micro-batched: raw
+        ``(file_ids, offsets, hit_mask, degraded_mask)`` with no per-key
+        boxing — the hot serving surface (``lookup`` builds name tuples
+        on top).  ``degraded[i]`` marks keys whose shard range was
+        unreachable: they read as misses, but the truth is unknown."""
         return self.batcher.lookup(keys, timeout=timeout)
 
     def lookup(
         self, keys: Sequence[str], timeout: Optional[float] = None
     ) -> List[Optional[Tuple[str, int]]]:
         """``[(file_name, offset) | None]`` per key, probe-coalesced."""
-        fid, off, hit = self.batcher.lookup(keys, timeout=timeout)
+        fid, off, hit, _ = self.batcher.lookup(keys, timeout=timeout)
         names = self.router.file_names
         return [
             (names[fid[i]], int(off[i])) if hit[i] else None
@@ -243,9 +282,11 @@ class QueryService:
     def _similar_probe_fn(self, rows: Sequence[np.ndarray]):
         """Batched probe for the similarity scheduler: stack the cohort's
         query rows into one plane and scan every shard once for all of
-        them at the service-wide ``similar_top_k``."""
+        them at the service-wide ``similar_top_k``.  Returns the
+        fault-tolerant quad — the per-query degraded flag is a fourth
+        row-aligned column, so it scatters back with each request."""
         fps = np.stack([np.asarray(r, dtype=np.uint32) for r in rows])
-        return self.router.similar_batch(fps, self.config.similar_top_k)
+        return self.router.similar_batch_ex(fps, self.config.similar_top_k)
 
     def _similarity_batcher(self) -> MicroBatcher:
         b = self._similar_batcher
@@ -269,7 +310,7 @@ class QueryService:
 
     def similar_async(
         self, fps: np.ndarray, k: Optional[int] = None
-    ) -> "Future[Tuple[np.ndarray, np.ndarray, np.ndarray]]":
+    ) -> "Future[SimilarResult]":
         """Submit a similarity batch; resolves like :meth:`similar`.
 
         The probe rides its own :class:`MicroBatcher` admission queue at
@@ -286,19 +327,20 @@ class QueryService:
         if fps.ndim == 1:
             fps = fps[None, :]
         if fps.shape[0] == 0:
-            out: "Future[Tuple[np.ndarray, np.ndarray, np.ndarray]]" = Future()
-            out.set_result((
+            out: "Future[SimilarResult]" = Future()
+            out.set_result(SimilarResult(
                 np.zeros((0, k), dtype=np.float32),
                 np.zeros((0, k), dtype=np.int32),
                 np.zeros((0, k), dtype=np.int64),
+                np.zeros(0, dtype=bool),
             ))
             return out
         if k > self.config.similar_top_k:
-            out: "Future[Tuple[np.ndarray, np.ndarray, np.ndarray]]" = Future()
+            out: "Future[SimilarResult]" = Future()
             if not out.set_running_or_notify_cancel():  # pragma: no cover
                 return out
             try:
-                out.set_result(self.router.similar_batch(fps, k))
+                out.set_result(self.router.similar_batch_ex(fps, k))
             except BaseException as e:  # noqa: BLE001 — delivered to caller
                 out.set_exception(e)
             return out
@@ -309,8 +351,10 @@ class QueryService:
             if not out.set_running_or_notify_cancel():  # pragma: no cover
                 return
             try:
-                scores, fids, offs = pf.result()
-                out.set_result((scores[:, :k], fids[:, :k], offs[:, :k]))
+                scores, fids, offs, deg = pf.result()
+                out.set_result(SimilarResult(
+                    scores[:, :k], fids[:, :k], offs[:, :k], deg
+                ))
             except BaseException as e:  # noqa: BLE001
                 out.set_exception(e)
 
@@ -322,14 +366,16 @@ class QueryService:
         fps: np.ndarray,
         k: Optional[int] = None,
         timeout: Optional[float] = None,
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    ) -> SimilarResult:
         """Blocking batched Tanimoto top-k through the admission queue.
 
         ``fps`` is ``(Q, W)`` (or a single ``(W,)`` row) of packed uint32
         query fingerprints (:func:`repro.core.fingerprint.fold_fingerprint`);
         returns ``(scores (Q, k) f32, file_ids (Q, k) i32, offsets (Q, k)
-        i64)`` ordered by ``(score desc, file_id asc, offset asc)`` with
-        ``-1`` pads — the :meth:`IndexStore.similar_batch` contract,
+        i64, degraded (Q,) bool)`` ordered by ``(score desc, file_id asc,
+        offset asc)`` with ``-1`` pads — the
+        :meth:`IndexStore.similar_batch` contract plus the degraded-mode
+        flag (True when the top-k was merged from surviving shards only),
         coalesced across concurrent callers.
         """
         return self.similar_async(fps, k).result(timeout=timeout)
@@ -392,7 +438,7 @@ class QueryService:
             if not out.set_running_or_notify_cancel():  # pragma: no cover
                 return
             try:
-                fids, offs, hit = pf.result()
+                fids, offs, hit, _deg = pf.result()
                 locs = self._locations(fids, offs, hit)
                 out.set_result(self._read_plan(
                     targets, keys, locs, do_verify, workers,
@@ -430,7 +476,7 @@ class QueryService:
         targets = list(targets)
         keys = [hashed_key(t, key_bits) if hashed else t for t in targets]
         t0 = time.perf_counter()
-        fids, offs, hit = await asyncio.wrap_future(
+        fids, offs, hit, _deg = await asyncio.wrap_future(
             self.batcher.submit(keys)
         )
         locs = self._locations(fids, offs, hit)
@@ -570,6 +616,20 @@ class QueryService:
                 "shard_probes": rs.shard_probes,
                 "keys_per_shard": dict(sorted(rs.keys_per_shard.items())),
             },
+            "fault": {
+                "hedges_fired": rs.hedges_fired,
+                "hedge_wins": rs.hedge_wins,
+                "retries": rs.retries,
+                "probes_failed": rs.probes_failed,
+                "degraded_batches": rs.degraded_batches,
+                "degraded_keys": rs.degraded_keys,
+                "degraded_similar": rs.degraded_similar,
+                "errors_per_shard": {
+                    s: dict(errs)
+                    for s, errs in sorted(rs.errors_per_shard.items())
+                },
+            },
+            "health": self.router.health.snapshot(),
             "store": {
                 "queries": qs.queries,
                 "hits": qs.hits,
@@ -613,6 +673,7 @@ class QueryService:
                 "coalesced_batches": ss.coalesced_batches,
                 "coalesced_requests": ss.coalesced_requests,
                 "cancelled": ss.cancelled,
+                "leader_deaths": ss.leader_deaths,
                 "latency_ms": lat,
             },
             "cache": {

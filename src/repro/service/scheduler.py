@@ -47,6 +47,18 @@ Requests are admitted whole (a request's keys never split across
 batches), results scatter back as zero-copy row slices of the batch
 arrays, and per-request latency (queue wait + total) is accounted in a
 bounded window for the service's p50/p99 rows.
+
+**Leader-death containment.**  Probes run on client threads, so a probe
+that raises tears down a *client*, not a service worker — the batcher
+must contain that.  A failing probe's exception is delivered to every
+future of its batch before the leader unwinds (``SystemExit`` /
+``KeyboardInterrupt`` re-raise afterwards — shutdown intent is not
+swallowed); requests that queued behind the dying leader are rescued by
+the watchdog's periodic sweep (any pending, un-armed queue with no live
+leader gets led); and ``close(drain=False)`` waits at most
+``close_grace_s`` for a wedged leader instead of forever, delivering a
+``RuntimeError`` to the in-flight cohort if its leader thread is found
+dead.
 """
 
 from __future__ import annotations
@@ -72,8 +84,15 @@ _COHORT_FRACTION = 1.0
 _EMA_ALPHA = 0.3
 # Bounded latency window (requests) for percentile accounting.
 _LATENCY_WINDOW = 8192
+# Watchdog sweep period: how long an orphaned cohort (its would-be leader
+# died before draining) waits for rescue, worst case.
+_SWEEP_INTERVAL_S = 0.1
+DEFAULT_CLOSE_GRACE_S = 5.0
 
-BatchResult = Tuple[np.ndarray, np.ndarray, np.ndarray]
+# A probe result is any tuple of row-sliceable arrays — the classic
+# (file_ids, offsets, hit) triple, or the fault-tolerant quad that adds
+# the degraded mask.  The batcher slices every column per request.
+BatchResult = Tuple[np.ndarray, ...]
 
 
 @dataclass
@@ -92,6 +111,7 @@ class SchedulerStats:
     coalesced_batches: int = 0  # batches that merged >= 2 requests
     coalesced_requests: int = 0 # requests that shared their batch
     cancelled: int = 0          # requests cancelled before probing
+    leader_deaths: int = 0      # in-flight cohorts whose leader thread died
     batch_keys_max: int = 0
 
     @property
@@ -112,12 +132,15 @@ class _Request:
 class MicroBatcher:
     """Admission queue + leader-combining flusher over a batched ``probe_fn``.
 
-    ``probe_fn(keys) -> (file_ids, offsets, hit_mask)`` is the batched
-    backend — a :class:`~repro.service.router.ShardRouter` in the query
-    service, any callable with the store's batch contract in tests.  Each
-    submitted request resolves to the row slice of the merged probe that
-    corresponds to its keys.  Probes execute on submitting threads (the
-    current leader); the only owned thread is the deadline watchdog.
+    ``probe_fn(keys) -> tuple of row-aligned arrays`` is the batched
+    backend — the classic ``(file_ids, offsets, hit_mask)`` triple of a
+    store, or a :class:`~repro.service.router.ShardRouter`'s
+    fault-tolerant quad with the per-key ``degraded`` mask; the batcher
+    slices whatever columns come back, so extra planes ride coalescing
+    for free.  Each submitted request resolves to the row slice of the
+    merged probe that corresponds to its keys (a NamedTuple result type
+    is preserved).  Probes execute on submitting threads (the current
+    leader); the only owned thread is the deadline watchdog.
     """
 
     def __init__(
@@ -125,6 +148,7 @@ class MicroBatcher:
         probe_fn: Callable[[List[str]], BatchResult],
         max_batch: int = DEFAULT_MAX_BATCH,
         max_wait_ms: float = DEFAULT_MAX_WAIT_MS,
+        close_grace_s: float = DEFAULT_CLOSE_GRACE_S,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -133,6 +157,7 @@ class MicroBatcher:
         self.probe_fn = probe_fn
         self.max_batch = int(max_batch)
         self.max_wait = max_wait_ms / 1e3
+        self.close_grace_s = float(close_grace_s)
         self.stats = SchedulerStats()
         self.wait_seconds: Deque[float] = deque(maxlen=_LATENCY_WINDOW)
         self.total_seconds: Deque[float] = deque(maxlen=_LATENCY_WINDOW)
@@ -145,6 +170,8 @@ class MicroBatcher:
         self._armed_evt = threading.Event()       # wakes the watchdog
         self._batch_ema = 1.0                     # recent flushed-keys estimate
         self._coalescing = False                  # last batch merged requests
+        self._inflight: Optional[List[_Request]] = None  # leader's cohort
+        self._leader_thread: Optional[threading.Thread] = None
         self._stop = False
         self._drain_on_stop = False
         self._watchdog = threading.Thread(
@@ -260,16 +287,28 @@ class MicroBatcher:
                 self._execute(batch, reason)
 
     def _watch_deadline(self) -> None:
-        """Fire armed batches whose cohort never completed (rare path)."""
+        """Fire armed batches whose cohort never completed, and rescue
+        cohorts orphaned by a dead leader (both rare paths)."""
         while True:
-            self._armed_evt.wait()
+            armed = self._armed_evt.wait(timeout=_SWEEP_INTERVAL_S)
             if self._stop:
                 return
+            if not armed:
+                # periodic sweep: pending requests with no armed target
+                # normally mean a live leader is about to re-drain them —
+                # but if that leader died mid-flush (poisoned probe), the
+                # cohort behind it would wait forever.  Leading here is a
+                # no-op when a real leader holds the lock.
+                with self._lock:
+                    orphaned = (
+                        bool(self._pending) and self._armed_target is None
+                    )
+                if orphaned:
+                    self._lead_shielded()
+                continue
             with self._lock:
                 if self._armed_target is None:
                     self._armed_evt.clear()
-                    if self._stop:
-                        return
                     continue
                 dt = self._armed_deadline - time.monotonic()
             if dt > 0:
@@ -283,7 +322,16 @@ class MicroBatcher:
                 if fire:
                     self._armed_target = None
             if fire:
-                self._maybe_lead()
+                self._lead_shielded()
+
+    def _lead_shielded(self) -> None:
+        """Lead from the watchdog: a poisoned probe (``SystemExit``, any
+        exception) is already delivered to its futures by ``_execute`` —
+        it must not take the rescue thread down with it."""
+        try:
+            self._maybe_lead()
+        except BaseException:  # noqa: BLE001
+            pass
 
     def _execute(self, batch: List[_Request], reason: str) -> None:
         t_flush = time.monotonic()
@@ -293,20 +341,32 @@ class MicroBatcher:
             all_keys = [k for req in batch for k in req.keys]
         for req in batch:
             req.t_flush = t_flush
+        with self._lock:
+            self._inflight = batch
+            self._leader_thread = threading.current_thread()
         try:
-            file_ids, offsets, hit = self.probe_fn(all_keys)
-        except BaseException as e:  # noqa: BLE001 — delivered, not swallowed
+            try:
+                cols = self.probe_fn(all_keys)
+            except BaseException as e:  # noqa: BLE001 — delivered first
+                for req in batch:
+                    if not req.future.done():
+                        req.future.set_exception(e)
+                if isinstance(e, (SystemExit, KeyboardInterrupt)):
+                    raise  # shutdown intent: unwind the leader thread too
+                return
+            t_done = time.monotonic()
+            # rebuild each request's rows with the probe's own result type
+            # (a NamedTuple like LookupBatchResult survives the slicing)
+            remake = getattr(type(cols), "_make", tuple)
+            row = 0
             for req in batch:
-                req.future.set_exception(e)
-            return
-        t_done = time.monotonic()
-        row = 0
-        for req in batch:
-            stop = row + len(req.keys)
-            req.future.set_result(
-                (file_ids[row:stop], offsets[row:stop], hit[row:stop])
-            )
-            row = stop
+                stop = row + len(req.keys)
+                req.future.set_result(remake(c[row:stop] for c in cols))
+                row = stop
+        finally:
+            with self._lock:
+                self._inflight = None
+                self._leader_thread = None
         # Batch stats are leader-only writes (serialized by the leader
         # lock); submit-side counters take the queue lock.
         st = self.stats
@@ -365,8 +425,11 @@ class MicroBatcher:
     def close(self, drain: bool = False) -> None:
         """Stop admitting.  ``drain=False`` (default) cancels queued
         requests — their futures report ``cancelled()``; ``drain=True``
-        probes what is queued first.  A leader mid-probe always finishes
-        its current batch either way."""
+        probes what is queued first.  A healthy leader mid-probe finishes
+        its current batch either way; a leader that never comes back is
+        waited out for at most ``close_grace_s``, and if its thread is
+        found dead the in-flight cohort's unresolved futures get a
+        ``RuntimeError`` instead of hanging their callers forever."""
         with self._lock:
             if self._stop:
                 return
@@ -378,15 +441,37 @@ class MicroBatcher:
             while self._pending:
                 with self._leader:
                     self._drain()
+            self._watchdog.join(timeout=10)
+            return
+        # Cancel queued requests first, under the queue lock — NOT after
+        # waiting for the leader.  A live leader popping concurrently
+        # skips cancelled futures (set_running_or_notify_cancel), so this
+        # cannot race a take; and a wedged or dead leader must not be
+        # able to block shutdown while callers pile up behind it.
+        with self._lock:
+            for req in self._pending:
+                if req.future.cancel():
+                    self.stats.cancelled += 1
+            self._pending.clear()
+            self._pending_keys = 0
+        if self._leader.acquire(timeout=self.close_grace_s):
+            self._leader.release()
         else:
-            # wait out a live leader so cancellation can't race its take
-            with self._leader:
-                with self._lock:
-                    for req in self._pending:
-                        if req.future.cancel():
-                            self.stats.cancelled += 1
-                    self._pending.clear()
-                    self._pending_keys = 0
+            # grace expired.  A wedged-but-alive probe keeps its futures
+            # (they resolve if it ever returns); a dead leader thread
+            # can never resolve its cohort — deliver the failure now.
+            with self._lock:
+                t = self._leader_thread
+                batch = self._inflight
+                if t is not None and not t.is_alive() and batch:
+                    self.stats.leader_deaths += 1
+                    err = RuntimeError(
+                        "micro-batcher leader died mid-flush"
+                    )
+                    for req in batch:
+                        if not req.future.done():
+                            req.future.set_exception(err)
+                    self._inflight = None
         self._watchdog.join(timeout=10)
 
     def __enter__(self) -> "MicroBatcher":

@@ -312,7 +312,8 @@ def test_service_similar_coalesces_and_slices(corpus, corpus_store_dir):
         for t in ths: t.start()
         for t in ths: t.join()
         st = IndexStore.open(sdir)
-        for i, (s, f, o) in outs.items():
+        for i, (s, f, o, deg) in outs.items():
+            assert not deg.any()
             ws, wf, wo = st.similar_batch(q[i : i + 2], 3, probe="host")
             assert np.array_equal(s, ws) and np.array_equal(f, wf)
             assert np.array_equal(o, wo)
@@ -320,7 +321,7 @@ def test_service_similar_coalesces_and_slices(corpus, corpus_store_dir):
         assert sim["scheduler"]["requests"] == 6
         # a 1-D query row is accepted; k above the probe width bypasses
         # the batcher but returns the same contract
-        s1, f1, o1 = svc.similar(q[0], 2)
+        s1, f1, o1, _ = svc.similar(q[0], 2)
         assert s1.shape == (1, 2)
         big = svc.similar(q[:2], svc.config.similar_top_k + 8)
         assert big[0].shape == (2, svc.config.similar_top_k + 8)
@@ -338,7 +339,7 @@ def test_service_similar_async_event_loop(corpus, corpus_store_dir):
             return [await asyncio.wrap_future(f) for f in futs]
         outs = asyncio.run(go())
         st = IndexStore.open(sdir)
-        for i, (s, f, o) in enumerate(outs):
+        for i, (s, f, o, _) in enumerate(outs):
             ws, wf, wo = st.similar_batch(q[i : i + 1], 3, probe="host")
             assert np.array_equal(s, ws) and np.array_equal(f, wf)
             assert np.array_equal(o, wo)
