@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows (harness convention) covering:
   Fig. 2    — runtime scaling and baseline/index crossover
   extract   — serial vs pipelined extraction engine (+ record cache)
   service   — continuous-batching query service vs per-key probing
+  serve     — decode-token continuous batching vs static LM batches
   kernels   — TPU-adapted hot-loop throughput (hash_mix, sorted_probe)
 
 Corpus scale via REPRO_BENCH_FILES / REPRO_BENCH_RPF env vars, or
@@ -17,16 +18,18 @@ Corpus scale via REPRO_BENCH_FILES / REPRO_BENCH_RPF env vars, or
 so span-backend and depth effects separate from fixed overheads.
 Roofline numbers come from the dry-run (results/dryrun.jsonl), not here.
 
-The extraction-engine, service, and similarity modules additionally emit
-machine-readable metrics (``BENCH_extract.json`` / ``BENCH_service.json``
-/ ``BENCH_similarity.json``) so records/sec, cache hit rate, sustained
-lookups/sec, p50/p99 latency, and the batching speedups are tracked
-across PRs.  The committed copies at the repo root are only rewritten
-with ``--update-metrics`` (run it on a quiet box when regenerating the
-tracked numbers); plain runs park their metrics in the bench cache so a
-smoke pass never churns the committed files.  ``REPRO_BENCH_EXTRACT_OUT``
-/ ``REPRO_BENCH_SERVICE_OUT`` / ``REPRO_BENCH_SIMILARITY_OUT`` override
-the destination outright.
+The extraction-engine, service, similarity, and LM-serving modules
+additionally emit machine-readable metrics (``BENCH_extract.json`` /
+``BENCH_service.json`` / ``BENCH_similarity.json`` /
+``BENCH_serve.json``) so records/sec, cache hit rate, sustained
+lookups/sec, tokens/sec, p50/p99 latency, and the batching speedups are
+tracked across PRs.  The committed copies at the repo root are only
+rewritten with ``--update-metrics`` (run it on a quiet box when
+regenerating the tracked numbers); plain runs park their metrics in the
+bench cache so a smoke pass never churns the committed files.
+``REPRO_BENCH_EXTRACT_OUT`` / ``REPRO_BENCH_SERVICE_OUT`` /
+``REPRO_BENCH_SIMILARITY_OUT`` / ``REPRO_BENCH_SERVE_OUT`` override the
+destination outright.
 """
 
 from __future__ import annotations
@@ -78,6 +81,7 @@ def main() -> None:
         extract_engine,
         fig2_scaling,
         kernels_tpu,
+        serve_tokens,
         service_load,
         similarity,
         table1_scan,
@@ -95,6 +99,7 @@ def main() -> None:
         ("fig2", fig2_scaling),
         ("extract", extract_engine),
         ("service", service_load),
+        ("serve", serve_tokens),
         ("similarity", similarity),
         ("kernels", kernels_tpu),
     ]
@@ -121,6 +126,9 @@ def main() -> None:
     _write_metrics(similarity.last_metrics(),
                    "REPRO_BENCH_SIMILARITY_OUT", "BENCH_similarity.json",
                    "similarity", args.update_metrics)
+    _write_metrics(serve_tokens.last_metrics(),
+                   "REPRO_BENCH_SERVE_OUT", "BENCH_serve.json",
+                   "serve", args.update_metrics)
     if failures:
         sys.exit(1)
 

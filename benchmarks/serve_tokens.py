@@ -1,0 +1,315 @@
+"""Decode-token serving benchmark — continuous batching vs static batches.
+
+Two LM serving architectures over the SAME tiny transformer and weights:
+
+* ``serve.static`` — the pre-paged architecture: concurrent requests
+  coalesce (via the query service's :class:`MicroBatcher`) into fixed
+  static batches that a :class:`~repro.serve.engine.Engine` pads together
+  and decodes until the LONGEST request's budget; each caller keeps only
+  its own budget's worth of tokens.  This is honest static serving — a
+  batch is pinned by its slowest member, and short requests ride along
+  burning lanes they don't use.
+* ``serve.continuous`` — the :class:`~repro.serve.scheduler
+  .ContinuousEngine`: slot admission per decode step over the paged KV
+  cache, EOS/budget eviction returning blocks, so a finished short
+  request's lane is re-admitted immediately instead of idling until the
+  batch drains.
+
+Both arms are driven by the same closed-loop generator the query-service
+benchmarks use (:func:`repro.service.loadgen.run_closed_loop` — one
+outstanding request per client, 2x more clients than slots), so
+tokens/sec measures *sustained* load, not a single drag race.  Delivered
+tokens (what callers keep) count for both arms; the static arm's
+overshoot past a request's budget is exactly the waste being measured.
+
+Byte parity is asserted before any throughput is reported: a uniform
+batch must match the static engine token-for-token, and a ragged mix
+must match per-prompt serial generation.  ``benchmarks/run.py`` writes
+:func:`last_metrics` to ``BENCH_serve.json``; the headline gate is
+``ragged.speedup >= 2`` with ``parity`` true.
+
+Env knobs: ``REPRO_BENCH_SERVE_SECONDS`` (per-arm window),
+``REPRO_BENCH_SERVE_SLOTS`` (decode batch width / slot count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import random
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from .common import row
+
+MAX_SLOTS = int(os.environ.get("REPRO_BENCH_SERVE_SLOTS", "8"))
+DURATION_S = float(os.environ.get("REPRO_BENCH_SERVE_SECONDS", "2.5"))
+BLOCK_SIZE = 16
+MAX_BLOCKS_PER_SEQ = 6          # 96-row view = longest prompt + budget
+N_BLOCKS = MAX_SLOTS * MAX_BLOCKS_PER_SEQ + 8   # slots + trash + headroom
+CLIENTS = 2 * MAX_SLOTS
+SHORT_BUDGETS = (2, 3, 4, 5, 6)
+LONG_BUDGET = 48
+LONG_FRACTION = 0.2
+UNIFORM_BUDGET = 12
+
+_LAST: Optional[Dict[str, object]] = None
+
+
+def last_metrics() -> Optional[Dict[str, object]]:
+    """Metrics of the most recent :func:`run` (for BENCH_serve.json)."""
+    return _LAST
+
+
+def _tiny_cfg():
+    from repro.configs import get_config
+
+    return dataclasses.replace(
+        get_config("yi-6b"),
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=300,
+    )
+
+
+def _prompts() -> List[str]:
+    """Deterministic InChI-flavored prompts, 8-24 chars (1-2 buckets)."""
+    rng = random.Random(11)
+    stem = "InChI=1S/C8H10N4O2/c1-10-4"
+    return [stem[: rng.randrange(8, 25)] for _ in range(48)]
+
+
+def _ragged_pool(prompts: List[str]) -> List[Tuple[str, int]]:
+    rng = random.Random(23)
+    pool = []
+    for i in range(64):
+        budget = (
+            LONG_BUDGET
+            if rng.random() < LONG_FRACTION
+            else rng.choice(SHORT_BUDGETS)
+        )
+        pool.append((prompts[i % len(prompts)], budget))
+    return pool
+
+
+class _StaticServer:
+    """Static-batch serving arm: MicroBatcher -> fixed-width Engine batches.
+
+    Requests coalesce into batches of up to ``MAX_SLOTS``; the probe pads
+    the batch to exactly ``MAX_SLOTS`` lanes (with the longest pool
+    prompt, so both the batch AND prefill dims are constant — one trace
+    per engine) and decodes on the smallest engine whose token cap covers
+    the batch's largest budget.  Callers get their budget's prefix.
+    """
+
+    def __init__(self, cfg, params, filler: str, max_len: int, caps):
+        from repro.serve.engine import Engine, ServeConfig
+        from repro.service.scheduler import MicroBatcher
+
+        self.filler = filler
+        self.engines = [
+            (cap, Engine(cfg, params, ServeConfig(
+                max_new_tokens=cap, max_len=max_len, greedy=True)))
+            for cap in sorted(caps)
+        ]
+        self.tokens = 0
+        self._lock = threading.Lock()
+        self.mb = MicroBatcher(self._probe, max_batch=MAX_SLOTS,
+                               max_wait_ms=4.0)
+
+    def _engine_for(self, cap: int):
+        for c, eng in self.engines:
+            if cap <= c:
+                return eng
+        raise ValueError(f"budget {cap} exceeds every engine cap")
+
+    def _probe(self, items: List[Tuple[str, int]]):
+        budgets = [b for _, b in items]
+        texts = [t for t, _ in items]
+        texts += [self.filler] * (MAX_SLOTS - len(texts))
+        rs = self._engine_for(max(budgets)).generate(texts)
+        outs = [rs[i].token_ids[: budgets[i]] for i in range(len(items))]
+        with self._lock:
+            self.tokens += sum(len(o) for o in outs)
+        return (outs,)
+
+    def request(self, item: Tuple[str, int]) -> List[int]:
+        return self.mb.submit([item]).result()[0][0]
+
+    def counters(self) -> Dict[str, float]:
+        with self._lock:
+            return {"tokens_out": float(self.tokens)}
+
+    def close(self):
+        self.mb.close()
+
+
+def _arm_report(rep, tokens: float) -> Dict[str, float]:
+    return {
+        "tokens_per_s": tokens / rep.seconds if rep.seconds > 0 else 0.0,
+        "requests": rep.requests,
+        "requests_per_s": rep.requests_per_sec,
+        "p50_ms": rep.p50_ms,
+        "p99_ms": rep.p99_ms,
+        "errors": rep.errors,
+        "seconds": rep.seconds,
+    }
+
+
+def run() -> List[str]:
+    global _LAST
+    import jax
+
+    from repro.models.registry import build_model
+    from repro.serve.engine import ServeConfig
+    from repro.serve.kvcache import PagedCacheSpec
+    from repro.serve.scheduler import ContinuousEngine
+    from repro.service.loadgen import run_closed_loop
+
+    out: List[str] = []
+    cfg = _tiny_cfg()
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+    spec = PagedCacheSpec(
+        n_blocks=N_BLOCKS, block_size=BLOCK_SIZE, max_slots=MAX_SLOTS,
+        max_blocks_per_seq=MAX_BLOCKS_PER_SEQ,
+    )
+    prompts = _prompts()
+    filler = max(prompts, key=len)
+    static = _StaticServer(
+        cfg, params, filler, spec.max_len,
+        caps=(max(SHORT_BUDGETS), UNIFORM_BUDGET, LONG_BUDGET),
+    )
+    cont = ContinuousEngine(
+        cfg, params, spec,
+        ServeConfig(max_new_tokens=LONG_BUDGET, max_len=spec.max_len,
+                    greedy=True),
+    )
+
+    # -- parity gate (doubles as trace warmup for both arms) ---------------
+    uni_items = [(p, UNIFORM_BUDGET) for p in prompts[:MAX_SLOTS]]
+    want_uni = static._probe(uni_items)[0]
+    got_uni = [
+        r.token_ids
+        for r in cont.generate([p for p, _ in uni_items], UNIFORM_BUDGET)
+    ]
+    parity = got_uni == want_uni
+
+    ragged_items = [
+        (prompts[0], 3), (prompts[1], LONG_BUDGET), (prompts[2], 6),
+        (prompts[3], 20), (prompts[4], max(SHORT_BUDGETS)),
+    ]
+    futs = [cont.submit(t, b, lead=False) for t, b in ragged_items]
+    cont._maybe_lead()
+    got_ragged = [f.result(timeout=300).token_ids for f in futs]
+    for (t, b), got in zip(ragged_items, got_ragged):
+        # reference from a single-request static batch (padded probe —
+        # also exercises the static arm's batch-composition invariance)
+        want = static._probe([(t, b)])[0][0]
+        parity = parity and got == want
+    out.append(row(
+        "serve.parity", 0.0,
+        f"uniform+ragged token parity vs static engine: "
+        f"{'ok' if parity else 'BROKEN'}"))
+    cont.reset_slo()
+
+    # -- ragged sustained load (the continuous-batching case) --------------
+    pool = _ragged_pool(prompts)
+    c0 = static.counters()["tokens_out"]
+    rep_s = run_closed_loop(
+        lambda ks: static.request(ks[0]), pool, clients=CLIENTS,
+        duration_s=DURATION_S, keys_per_request=1,
+        counters_fn=static.counters,
+    )
+    tok_s = rep_s.counters.get("tokens_out", static.counters()["tokens_out"] - c0)
+    rep_c = run_closed_loop(
+        lambda ks: cont.submit(ks[0][0], max_new_tokens=ks[0][1]).result(),
+        pool, clients=CLIENTS, duration_s=DURATION_S, keys_per_request=1,
+        counters_fn=cont.counters,
+    )
+    tok_c = rep_c.counters["tokens_out"]
+    ragged = {
+        "static": _arm_report(rep_s, tok_s),
+        "continuous": _arm_report(rep_c, tok_c),
+    }
+    ragged["speedup"] = (
+        ragged["continuous"]["tokens_per_s"]
+        / max(ragged["static"]["tokens_per_s"], 1e-9)
+    )
+    slo = cont.slo_ms()
+    out.append(row(
+        "serve.static_ragged", rep_s.seconds,
+        f"{ragged['static']['tokens_per_s']:.0f} tok/s, "
+        f"{rep_s.requests} requests, {CLIENTS} clients"))
+    out.append(row(
+        "serve.continuous_ragged", rep_c.seconds,
+        f"{ragged['continuous']['tokens_per_s']:.0f} tok/s "
+        f"({ragged['speedup']:.1f}x static), ttft p50 "
+        f"{slo['ttft_p50_ms']:.1f} ms, itl p50 {slo['itl_p50_ms']:.2f} ms "
+        f"/ p99 {slo['itl_p99_ms']:.2f} ms"))
+
+    # -- uniform control: no raggedness, static batching is near-optimal ---
+    pool_u = [(p, UNIFORM_BUDGET) for p in prompts]
+    c0 = static.counters()["tokens_out"]
+    rep_su = run_closed_loop(
+        lambda ks: static.request(ks[0]), pool_u, clients=CLIENTS,
+        duration_s=DURATION_S / 2, keys_per_request=1,
+        counters_fn=static.counters,
+    )
+    tok_su = rep_su.counters.get(
+        "tokens_out", static.counters()["tokens_out"] - c0
+    )
+    rep_cu = run_closed_loop(
+        lambda ks: cont.submit(ks[0][0], max_new_tokens=ks[0][1]).result(),
+        pool_u, clients=CLIENTS, duration_s=DURATION_S / 2,
+        keys_per_request=1, counters_fn=cont.counters,
+    )
+    tok_cu = rep_cu.counters["tokens_out"]
+    uniform = {
+        "static": _arm_report(rep_su, tok_su),
+        "continuous": _arm_report(rep_cu, tok_cu),
+    }
+    uniform["speedup"] = (
+        uniform["continuous"]["tokens_per_s"]
+        / max(uniform["static"]["tokens_per_s"], 1e-9)
+    )
+    out.append(row(
+        "serve.uniform_control", rep_cu.seconds,
+        f"continuous {uniform['continuous']['tokens_per_s']:.0f} vs static "
+        f"{uniform['static']['tokens_per_s']:.0f} tok/s "
+        f"({uniform['speedup']:.2f}x) at uniform budget {UNIFORM_BUDGET}"))
+
+    sched = cont.counters()
+    _LAST = {
+        "config": {
+            "max_slots": MAX_SLOTS,
+            "block_size": BLOCK_SIZE,
+            "n_blocks": N_BLOCKS,
+            "max_blocks_per_seq": MAX_BLOCKS_PER_SEQ,
+            "clients": CLIENTS,
+            "duration_s": DURATION_S,
+            "short_budgets": list(SHORT_BUDGETS),
+            "long_budget": LONG_BUDGET,
+            "long_fraction": LONG_FRACTION,
+            "uniform_budget": UNIFORM_BUDGET,
+            "model": {
+                "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads, "vocab_size": cfg.vocab_size,
+            },
+        },
+        "ragged": ragged,
+        "uniform": uniform,
+        "slo": slo,
+        "scheduler": {
+            k: sched[k]
+            for k in ("requests", "completed", "steps", "tokens_out",
+                      "decode_tokens", "prefills", "admission_stalls",
+                      "peak_active", "tokens_per_step")
+        },
+        "allocator": {
+            k: sched[f"blk_{k}"]
+            for k in ("allocs", "frees", "alloc_failures", "peak_in_use")
+        },
+        "parity": bool(parity),
+    }
+    cont.close()
+    static.close()
+    return out

@@ -8,10 +8,13 @@
 # through the micro-batching scheduler: byte parity vs the serial
 # reference + a nonzero coalesced-batch count), a similarity smoke (the
 # Tanimoto Pallas kernel in interpret mode vs the NumPy oracle on a
-# collision-seeded plane, byte-exact top-k), and a smoke-scale pass of
-# the full benchmark harness — which must also produce the
-# BENCH_extract.json / BENCH_service.json / BENCH_similarity.json
-# metrics files — so the bench modules can't silently rot.  Smoke runs
+# collision-seeded plane, byte-exact top-k), an LM-serving smoke (the
+# paged-KV continuous-batching engine token-for-token identical to the
+# static engine on uniform AND ragged request mixes), and a smoke-scale
+# pass of the full benchmark harness — which must also produce the
+# BENCH_extract.json / BENCH_service.json / BENCH_similarity.json /
+# BENCH_serve.json metrics files — so the bench modules can't silently
+# rot.  Smoke runs
 # park their metrics at temp paths; the committed BENCH_*.json files
 # only change via `python -m benchmarks.run --update-metrics`.
 #
@@ -273,6 +276,48 @@ with QueryService(store, router, ServiceConfig(replicas=2)) as svc:
 router.close()
 PY
 
+echo "== serve smoke: continuous batching vs static engine parity =="
+python - <<'PY'
+import dataclasses
+import jax
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kvcache import PagedCacheSpec
+from repro.serve.scheduler import ContinuousEngine
+
+cfg = dataclasses.replace(
+    get_config("yi-6b"), n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+    head_dim=32, d_ff=128, vocab_size=300)
+params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+scfg = ServeConfig(max_new_tokens=10, max_len=64, greedy=True)
+spec = PagedCacheSpec(n_blocks=33, block_size=8, max_slots=3,
+                      max_blocks_per_seq=8)
+static = Engine(cfg, params, scfg)
+cont = ContinuousEngine(cfg, params, spec, scfg)
+# uniform batch: token-for-token identical to the static engine
+texts = ["InChI=1S/C8H9NO2/", "C6H12O6/c1-", "smiles:CCO"]
+want = [r.token_ids for r in static.generate(texts)]
+got = [r.token_ids for r in cont.generate(texts)]
+assert got == want, "continuous engine diverged from static on uniform batch"
+# ragged budgets across more requests than slots: per-prompt serial parity
+ragged = [("ab", 3), ("InChI=1S/C4H10/c1-3-4-2", 10), ("xy", 5), ("C1=CC", 7)]
+futs = [cont.submit(t, b, lead=False) for t, b in ragged]
+cont._maybe_lead()
+for (t, b), f in zip(ragged, futs):
+    assert f.result(timeout=300).token_ids == \
+        static.generate([t])[0].token_ids[:b], f"ragged diverged on {t!r}"
+cont._mgr.check()
+st = cont._mgr.stats()
+assert st["in_use"] == 0 and st["allocs"] == st["frees"], st
+slo = cont.slo_ms()
+assert slo["ttft_p50_ms"] > 0 and slo["itl_p50_ms"] > 0, slo
+cont.close()
+print(f"serve smoke OK: {len(texts)} uniform + {len(ragged)} ragged requests "
+      f"byte-identical to the static engine; {st['allocs']} block allocs "
+      f"all returned, itl p50 {slo['itl_p50_ms']:.2f} ms")
+PY
+
 echo "== similarity smoke: Tanimoto kernel (interpret) vs oracle =="
 python - <<'PY'
 import numpy as np
@@ -303,17 +348,21 @@ BENCH_OUT=$(mktemp)
 BENCH_JSON=$(mktemp -u)
 BENCH_SVC_JSON=$(mktemp -u)
 BENCH_SIM_JSON=$(mktemp -u)
+BENCH_SRV_JSON=$(mktemp -u)
 if ! REPRO_BENCH_FILES=2 REPRO_BENCH_RPF=250 \
      REPRO_BENCH_CACHE="${TMPDIR:-/tmp}/repro_bench_smoke" \
      REPRO_BENCH_EXTRACT_OUT="$BENCH_JSON" \
      REPRO_BENCH_SERVICE_OUT="$BENCH_SVC_JSON" \
      REPRO_BENCH_SIMILARITY_OUT="$BENCH_SIM_JSON" \
+     REPRO_BENCH_SERVE_OUT="$BENCH_SRV_JSON" \
      REPRO_BENCH_SERVICE_SECONDS=0.4 \
      REPRO_BENCH_SIM_SECONDS=0.4 \
+     REPRO_BENCH_SERVE_SECONDS=0.4 \
      python -m benchmarks.run > "$BENCH_OUT"; then
   echo "benchmark harness failed:"
   grep '\.ERROR,' "$BENCH_OUT" || tail -5 "$BENCH_OUT"
-  rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON" "$BENCH_SIM_JSON"
+  rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON" "$BENCH_SIM_JSON" \
+        "$BENCH_SRV_JSON"
   exit 1
 fi
 echo "bench harness OK: $(wc -l < "$BENCH_OUT") CSV rows"
@@ -352,7 +401,21 @@ assert m["parity"] is True, "a similarity backend diverged from the oracle"
 print(f"BENCH_similarity.json OK: {m['qps']['kernel']:.0f} q/s "
       f"({m['speedup_kernel_vs_naive']:.1f}x naive loop), parity true")
 PY
-rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON" "$BENCH_SIM_JSON"
+test -s "$BENCH_SRV_JSON" || { echo "BENCH_serve.json not produced"; exit 1; }
+python - "$BENCH_SRV_JSON" <<'PY'
+import json, sys
+m = json.load(open(sys.argv[1]))
+for key in ("ragged", "uniform", "slo", "scheduler", "allocator", "parity"):
+    assert key in m, f"BENCH_serve.json missing {key!r}"
+assert m["parity"] is True, "continuous engine diverged from static"
+assert m["slo"]["ttft_p50_ms"] > 0 and m["slo"]["itl_p50_ms"] > 0, m["slo"]
+print(f"BENCH_serve.json OK: continuous "
+      f"{m['ragged']['continuous']['tokens_per_s']:.0f} tok/s "
+      f"({m['ragged']['speedup']:.1f}x static on the ragged mix), "
+      f"itl p50 {m['slo']['itl_p50_ms']:.2f} ms")
+PY
+rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON" "$BENCH_SIM_JSON" \
+      "$BENCH_SRV_JSON"
 
 echo "== bench-regression gate: committed BENCH_extract.json =="
 python - BENCH_extract.json <<'PY'
@@ -398,6 +461,32 @@ if errs:
     sys.exit(1)
 print(f"similarity gate OK: {m['qps']['kernel']:.0f} q/s via "
       f"{m['config']['backend']} ({speedup:.1f}x naive loop), parity true")
+PY
+
+echo "== bench-regression gate: committed BENCH_serve.json =="
+python - BENCH_serve.json <<'PY'
+import json, sys
+m = json.load(open(sys.argv[1]))
+speedup, parity, slo = m["ragged"]["speedup"], m["parity"], m["slo"]
+errs = []
+if parity is not True:
+    errs.append("parity flag is not true (continuous vs static diverged)")
+if speedup < 2.0:
+    errs.append(f"ragged speedup {speedup:.2f}x < 2x floor")
+if not (slo["ttft_p50_ms"] > 0 and slo["itl_p50_ms"] > 0
+        and slo["itl_p99_ms"] >= slo["itl_p50_ms"]):
+    errs.append(f"SLO percentiles unpopulated or inconsistent: {slo}")
+if errs:
+    print("BENCH REGRESSION in committed BENCH_serve.json:")
+    for e in errs:
+        print(f"  - {e}")
+    print("re-run `python -m benchmarks.run --update-metrics` on a quiet "
+          "box and commit the refreshed metrics, or fix the decode loop.")
+    sys.exit(1)
+print(f"serve gate OK: {m['ragged']['continuous']['tokens_per_s']:.0f} tok/s "
+      f"continuous ({speedup:.1f}x static ragged), ttft p50 "
+      f"{slo['ttft_p50_ms']:.1f} ms, itl p50 {slo['itl_p50_ms']:.2f} ms, "
+      f"parity true")
 PY
 
 echo "== all checks passed =="

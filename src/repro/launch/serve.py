@@ -8,6 +8,13 @@ serves a batch of prompts, reporting prefill/decode timings.
 shardings (:mod:`repro.dist.logical`), the request batch spreads over the
 data axis, and batched decode runs under the mesh so every ``constrain``
 in the model takes effect.  The default ("1x1") stays single-device.
+
+``--continuous`` serves through the paged-KV continuous-batching engine
+instead (:mod:`repro.serve.scheduler`): prompts are submitted as
+independent requests that admit into ``--max-slots`` decode lanes backed
+by ``--block-size`` KV blocks, and the report adds the TTFT/inter-token
+SLO percentiles.  Continuous mode is single-device and greedy-only
+(``--mesh`` other than 1x1 is rejected rather than silently ignored).
 """
 
 from __future__ import annotations
@@ -20,6 +27,8 @@ from repro.configs import ARCH_NAMES, get_config
 from repro.launch.mesh import mesh_from_str
 from repro.models.registry import build_model
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kvcache import PagedCacheSpec, blocks_for
+from repro.serve.scheduler import ContinuousEngine
 
 
 def main():
@@ -29,6 +38,12 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 2x4")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve via the paged-KV continuous-batching engine")
+    ap.add_argument("--max-slots", type=int, default=8,
+                    help="decode batch width of the continuous engine")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV rows per paged-cache block")
     ap.add_argument("--prompts", nargs="*", default=[
         "InChI=1S/C12H22O2/", "InChI=1S/C8H9NO2/",
     ])
@@ -39,9 +54,44 @@ def main():
         cfg = cfg.smoke()
     if cfg.family == "vlm":
         print("note: vlm frontend stubbed — serving text-only prompts")
-    mesh = mesh_from_str(args.mesh)
     api = build_model(cfg)
     params, specs = api.init(jax.random.PRNGKey(0))
+
+    if args.continuous:
+        if args.mesh != "1x1":
+            raise SystemExit("--continuous serves single-device; drop --mesh")
+        if not api.supports_paged:
+            raise SystemExit(
+                f"--arch {args.arch} has no paged-KV decode path "
+                "(windowed attention or non-transformer family); "
+                "drop --continuous")
+        m = blocks_for(args.max_len, args.block_size)
+        spec = PagedCacheSpec(
+            n_blocks=args.max_slots * m + 2,   # full occupancy + trash
+            block_size=args.block_size,
+            max_slots=args.max_slots,
+            max_blocks_per_seq=m,
+        )
+        eng = ContinuousEngine(
+            cfg, params, spec,
+            ServeConfig(max_new_tokens=args.max_new_tokens,
+                        max_len=spec.max_len),
+        )
+        print(f"serving {len(args.prompts)} prompts on {args.arch} "
+              f"({'full' if args.full_config else 'smoke'} config, "
+              f"continuous: {args.max_slots} slots x "
+              f"{spec.max_blocks_per_seq} blocks of {args.block_size})…")
+        for i, r in enumerate(eng.generate(args.prompts)):
+            print(f"[{i}] prefill {r.prefill_s*1e3:.0f} ms, "
+                  f"{r.tokens_per_s:.1f} tok/s → {r.text[:60]!r}")
+        slo = eng.slo_ms()
+        print(f"slo: ttft p50 {slo['ttft_p50_ms']:.1f} ms / "
+              f"p99 {slo['ttft_p99_ms']:.1f} ms, itl p50 "
+              f"{slo['itl_p50_ms']:.2f} ms / p99 {slo['itl_p99_ms']:.2f} ms")
+        eng.close()
+        return
+
+    mesh = mesh_from_str(args.mesh)
     eng = Engine(
         cfg, params,
         ServeConfig(max_new_tokens=args.max_new_tokens, max_len=args.max_len),

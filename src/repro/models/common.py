@@ -39,11 +39,15 @@ __all__ = [
     "attention_init",
     "attention_apply",
     "attention_decode",
+    "attention_decode_paged",
+    "paged_view",
+    "paged_write_rows",
     "mlp_init",
     "mlp_apply",
     "embed_init",
     "embed_apply",
     "unembed_logits",
+    "last_token_logits",
     "chunked_xent",
     "param_count",
 ]
@@ -333,6 +337,115 @@ def attention_decode(
 
 
 # ---------------------------------------------------------------------------
+# paged (block) KV cache
+# ---------------------------------------------------------------------------
+#
+# The paged cache replaces the per-sequence contiguous (B, Hkv, S, Dh)
+# cache with ONE preallocated pool of fixed-size blocks shared by every
+# batch slot: pool (Hkv, P, Dh) where P = n_blocks * block_size and block
+# i owns rows [i*bs, (i+1)*bs).  A per-slot block table (B, M) of block
+# ids maps logical token position t to pool row
+# ``table[b, t // bs] * bs + t % bs``.  All shapes are static (fixed pool,
+# fixed table width), so decode traces once and slot admission/eviction
+# never retraces — the whole point for continuous batching.  Block id 0
+# is reserved as a trash block: unallocated table entries point at it, so
+# writes from inactive slots land somewhere harmless and reads from it
+# are always masked by the position-validity mask.
+
+
+def paged_view(pool: jax.Array, tables: jax.Array, block_size: int) -> jax.Array:
+    """Gather per-slot contiguous KV views out of the block pool.
+
+    pool (Hkv, P, Dh), tables (B, M) int32 → (B, Hkv, M*bs, Dh).  The
+    gather is jit-stable: output shape depends only on the static table
+    width, never on how many blocks a slot actually owns.
+    """
+    b, m = tables.shape
+    flat = (
+        tables[:, :, None] * block_size
+        + jnp.arange(block_size, dtype=tables.dtype)[None, None, :]
+    ).reshape(b, m * block_size)
+    return jnp.swapaxes(pool[:, flat], 0, 1)  # (B, Hkv, L, Dh)
+
+
+def paged_write_rows(
+    pool: jax.Array,        # (Hkv, P, Dh)
+    rows: jax.Array,        # (Hkv, S, Dh) values for logical positions 0..S-1
+    table_row: jax.Array,   # (M,) int32 block table of the target slot
+    block_size: int,
+) -> jax.Array:
+    """Scatter S contiguous logical positions of one slot into the pool
+    (prefill → paged cache hand-off).  Positions past the slot's allocated
+    blocks resolve to the trash block."""
+    s = rows.shape[1]
+    t = jnp.arange(s)
+    flat = table_row[t // block_size] * block_size + t % block_size
+    return pool.at[:, flat, :].set(rows.astype(pool.dtype))
+
+
+def attention_decode_paged(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,                 # (B, 1, D)
+    pos: jax.Array,               # (B,) absolute position of the new token
+    cache: Dict[str, jax.Array],  # {"k","v"}: (Hkv, P, Dh) block pools
+    tables: jax.Array,            # (B, M) int32 block tables
+    block_size: int,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against the paged pool.
+
+    Write-then-gather: the new token's K/V goes to its slot's block at
+    ``pos``, then the slot's blocks are gathered into a contiguous
+    (B, Hkv, L, Dh) view and the math is exactly
+    :func:`attention_decode`'s — same einsums, same masking constant — so
+    greedy decode is byte-identical to the contiguous cache whenever the
+    view length L matches the contiguous slot count (masked rows
+    contribute exact zeros either way).
+    """
+    cdt = compute_dtype(cfg)
+    b, _, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(params, cfg, x)            # (B,1,H,Dh)/(B,1,Hkv,Dh)
+    if use_rope:
+        p1 = pos[:, None]
+        q = apply_rope(q, p1, cfg.rope_theta)
+        k = apply_rope(k, p1, cfg.rope_theta)
+    q = q[:, 0]                                # (B, H, Dh)
+    k_new = jnp.swapaxes(k, 1, 2)[:, :, 0]     # (B, Hkv, Dh)
+    v_new = jnp.swapaxes(v, 1, 2)[:, :, 0]
+
+    flat_w = (
+        tables[jnp.arange(b), pos // block_size] * block_size
+        + pos % block_size
+    )                                          # (B,)
+    k_pool = cache["k"].at[:, flat_w, :].set(
+        jnp.swapaxes(k_new, 0, 1).astype(cache["k"].dtype)
+    )
+    v_pool = cache["v"].at[:, flat_w, :].set(
+        jnp.swapaxes(v_new, 0, 1).astype(cache["v"].dtype)
+    )
+
+    k_cache = paged_view(k_pool, tables, block_size)   # (B, Hkv, L, Dh)
+    v_cache = paged_view(v_pool, tables, block_size)
+    slots = k_cache.shape[2]
+    valid = jnp.arange(slots)[None, :] <= pos[:, None]
+    from repro import flags as _flags
+
+    if _flags.DECODE_CHUNKED:
+        ctx = decode_attention_chunked(q, k_cache, v_cache, valid)
+    else:
+        p = _gqa_decode_scores(q, k_cache, valid, cdt)  # (B,Hkv,G,S) f32
+        ctx = jnp.einsum(
+            "bkgs,bksd->bkgd", p.astype(v_cache.dtype), v_cache,
+            preferred_element_type=jnp.float32,
+        )
+    ctx = ctx.reshape(b, h * dh).astype(cdt)
+    out = (ctx @ params["wo"].astype(cdt))[:, None, :]  # (B,1,D)
+    return out, {"k": k_pool, "v": v_pool}
+
+
+# ---------------------------------------------------------------------------
 # MLP (SwiGLU)
 # ---------------------------------------------------------------------------
 
@@ -396,6 +509,27 @@ def unembed_logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     ).astype(cdt)
     logits = x @ w
     return constrain(logits, "batch", "seq", "vocab")
+
+
+def last_token_logits(
+    params,
+    cfg: ModelConfig,
+    hidden: jax.Array,                    # (B, S, D) final hidden states
+    lengths: Optional[jax.Array] = None,  # (B,) true prompt lengths
+    offset: int = 0,                      # prepended non-text positions (VLM)
+) -> jax.Array:
+    """Logits at each sequence's TRUE last prompt position.
+
+    Right-padded ragged batches must not read their "last logits" from a
+    pad row — gather hidden at ``offset + lengths - 1`` per sequence.
+    ``lengths=None`` keeps the uniform-batch fast path (last row).
+    """
+    if lengths is None:
+        last = hidden[:, -1:, :]
+    else:
+        idx = (lengths.astype(jnp.int32) + offset - 1)[:, None, None]
+        last = jnp.take_along_axis(hidden, idx, axis=1)
+    return unembed_logits(params, cfg, last)[:, 0]
 
 
 def chunked_xent(

@@ -37,6 +37,7 @@ from repro.models.common import (
     mlp_init,
     rmsnorm,
     rmsnorm_init,
+    last_token_logits,
     unembed_logits,
 )
 from repro.models.transformer import _stack_inits
@@ -171,7 +172,8 @@ def encdec_cache_init(cfg: ModelConfig, batch: int, max_len: int):
     return cache, spec
 
 
-def encdec_prefill(params, cfg: ModelConfig, frames, tokens, max_len=None):
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens, max_len=None,
+                   lengths=None):
     """Encode + decoder forward; builds self- and cross-KV caches."""
     cdt = compute_dtype(cfg)
     enc_out = encode(params, cfg, frames)
@@ -227,7 +229,7 @@ def encdec_prefill(params, cfg: ModelConfig, frames, tokens, max_len=None):
 
     x, cache = lax.scan(body, x, params["dec_blocks"], unroll=flags.scan_unroll())
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = unembed_logits(params["embed"], cfg, x[:, -1:, :])[:, 0]
+    logits = last_token_logits(params["embed"], cfg, x, lengths=lengths)
     return logits, cache
 
 

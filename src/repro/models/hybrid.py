@@ -32,6 +32,7 @@ from repro.models.common import (
     mlp_init,
     rmsnorm,
     rmsnorm_init,
+    last_token_logits,
     unembed_logits,
 )
 from repro.models.mamba2 import (
@@ -199,7 +200,8 @@ def hybrid_cache_init(cfg: ModelConfig, batch: int, max_len: int):
     return cache, spec
 
 
-def hybrid_prefill(params, cfg: ModelConfig, tokens, max_len: Optional[int] = None):
+def hybrid_prefill(params, cfg: ModelConfig, tokens, max_len: Optional[int] = None,
+                   lengths=None):
     """Forward + cache build.  Attention KV padded to ``max_len``."""
     cdt = compute_dtype(cfg)
     x = embed_apply(params["embed"], cfg, tokens)
@@ -255,7 +257,7 @@ def hybrid_prefill(params, cfg: ModelConfig, tokens, max_len: Optional[int] = No
 
     x, cache = lax.scan(body, x, params["blocks"], unroll=flags.scan_unroll())
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = unembed_logits(params["embed"], cfg, x[:, -1:, :])[:, 0]
+    logits = last_token_logits(params["embed"], cfg, x, lengths=lengths)
     return logits, cache
 
 

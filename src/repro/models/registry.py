@@ -10,6 +10,19 @@ benchmarks program against this interface only:
   decode_step(params, token, pos, cache) → (logits, cache)  [serve_step core]
   cache_init(batch, max_len)      → (cache, cache_specs)
   input_specs(shape)              → dict of ShapeDtypeStructs (dry-run)
+
+``batch["lengths"]`` (B,) in prefill gathers each sequence's true
+last-prompt-position logits, so ragged right-padded batches don't start
+greedy continuation from a pad row.
+
+Families that support the paged (block) KV cache — the continuous-batching
+serving path — additionally expose three optional entry points (``None``
+elsewhere; the continuous engine refuses politely):
+
+  paged_cache_init(n_blocks, block_size)           → (cache, cache_specs)
+  decode_step_paged(params, token, pos, tables, cache, block_size)
+                                                   → (logits, cache)
+  paged_prefill_write(cache, prefill_cache, table_row, block_size) → cache
 """
 
 from __future__ import annotations
@@ -37,6 +50,14 @@ class ModelApi:
     prefill: Callable
     decode_step: Callable
     cache_init: Callable
+    # paged-KV serving contract (continuous batching); None where unsupported
+    paged_cache_init: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
+    paged_prefill_write: Optional[Callable] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.decode_step_paged is not None
 
     def input_specs(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
         """ShapeDtypeStruct stand-ins for every model input of this cell.
@@ -87,8 +108,13 @@ def _transformer_api(cfg: ModelConfig) -> ModelApi:
             batch["tokens"],
             extra_embeds=batch.get("patch_embeds"),
             max_len=max_len,
+            lengths=batch.get("lengths"),
         )
 
+    # paged serving covers global-attention stacks only (no sliding-window
+    # ring buffers in the block pool yet) — gate here so Engine/scheduler
+    # can introspect support instead of tracing into a NotImplementedError
+    paged = not any(w is not None for w in transformer.layer_windows(cfg))
     return ModelApi(
         cfg=cfg,
         init=lambda key: transformer.init_lm(cfg, key),
@@ -96,6 +122,20 @@ def _transformer_api(cfg: ModelConfig) -> ModelApi:
         prefill=prefill,
         decode_step=lambda p, t, pos, c: transformer.lm_decode_step(p, cfg, t, pos, c),
         cache_init=lambda b, m: transformer.lm_cache_init(cfg, b, m),
+        paged_cache_init=(
+            (lambda n, bs: transformer.lm_paged_cache_init(cfg, n, bs))
+            if paged else None
+        ),
+        decode_step_paged=(
+            (lambda p, t, pos, tb, c, bs:
+             transformer.lm_decode_step_paged(p, cfg, t, pos, tb, c, bs))
+            if paged else None
+        ),
+        paged_prefill_write=(
+            (lambda c, pc, row, bs:
+             transformer.lm_paged_prefill_write(cfg, c, pc, row, bs))
+            if paged else None
+        ),
     )
 
 
@@ -107,7 +147,8 @@ def _hybrid_api(cfg: ModelConfig) -> ModelApi:
             p, cfg, batch["tokens"], loss_mask=batch.get("loss_mask")
         ),
         prefill=lambda p, batch, max_len=None: hybrid.hybrid_prefill(
-            p, cfg, batch["tokens"], max_len=max_len
+            p, cfg, batch["tokens"], max_len=max_len,
+            lengths=batch.get("lengths"),
         ),
         decode_step=lambda p, t, pos, c: hybrid.hybrid_decode_step(p, cfg, t, pos, c),
         cache_init=lambda b, m: hybrid.hybrid_cache_init(cfg, b, m),
@@ -122,7 +163,8 @@ def _ssm_api(cfg: ModelConfig) -> ModelApi:
             p, cfg, batch["tokens"], loss_mask=batch.get("loss_mask")
         ),
         prefill=lambda p, batch, max_len=None: ssm.ssm_prefill(
-            p, cfg, batch["tokens"], max_len=max_len
+            p, cfg, batch["tokens"], max_len=max_len,
+            lengths=batch.get("lengths"),
         ),
         decode_step=lambda p, t, pos, c: ssm.ssm_decode_step(p, cfg, t, pos, c),
         cache_init=lambda b, m: ssm.ssm_cache_init(cfg, b, m),
@@ -138,7 +180,8 @@ def _encdec_api(cfg: ModelConfig) -> ModelApi:
             loss_mask=batch.get("loss_mask"),
         ),
         prefill=lambda p, batch, max_len=None: encdec.encdec_prefill(
-            p, cfg, batch["frames"], batch["tokens"], max_len=max_len
+            p, cfg, batch["frames"], batch["tokens"], max_len=max_len,
+            lengths=batch.get("lengths"),
         ),
         decode_step=lambda p, t, pos, c: encdec.encdec_decode_step(p, cfg, t, pos, c),
         cache_init=lambda b, m: encdec.encdec_cache_init(cfg, b, m),

@@ -23,6 +23,7 @@ from repro.models.common import (
     embed_init,
     rmsnorm,
     rmsnorm_init,
+    last_token_logits,
     unembed_logits,
 )
 from repro.models.mamba2 import (
@@ -96,7 +97,8 @@ def ssm_cache_init(cfg: ModelConfig, batch: int, max_len: int = 0):
     return cache, spec
 
 
-def ssm_prefill(params, cfg: ModelConfig, tokens, max_len: Optional[int] = None):
+def ssm_prefill(params, cfg: ModelConfig, tokens, max_len: Optional[int] = None,
+                lengths=None):
     x = embed_apply(params["embed"], cfg, tokens)
 
     def body(x, blk):
@@ -106,7 +108,7 @@ def ssm_prefill(params, cfg: ModelConfig, tokens, max_len: Optional[int] = None)
 
     x, cache = lax.scan(body, x, params["blocks"], unroll=flags.scan_unroll())
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = unembed_logits(params["embed"], cfg, x[:, -1:, :])[:, 0]
+    logits = last_token_logits(params["embed"], cfg, x, lengths=lengths)
     return logits, cache
 
 

@@ -28,13 +28,16 @@ from repro.models import moe as moe_mod
 from repro.models.common import (
     attention_apply,
     attention_decode,
+    attention_decode_paged,
     attention_init,
     chunked_xent,
     compute_dtype,
     embed_apply,
     embed_init,
+    last_token_logits,
     mlp_apply,
     mlp_init,
+    paged_write_rows,
     rmsnorm,
     rmsnorm_init,
     unembed_logits,
@@ -49,6 +52,9 @@ __all__ = [
     "lm_prefill",
     "lm_decode_step",
     "lm_cache_init",
+    "lm_paged_cache_init",
+    "lm_decode_step_paged",
+    "lm_paged_prefill_write",
     "layer_windows",
 ]
 
@@ -239,11 +245,14 @@ def lm_prefill(
     tokens: jax.Array,
     extra_embeds: Optional[jax.Array] = None,
     max_len: Optional[int] = None,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, PyTree]:
     """Full-sequence forward that also materializes the KV cache.
 
     Returns (last-token logits (B, V), cache).  Window layers keep only the
     trailing ``window`` keys (ring-buffer layout, slot = pos % window).
+    ``lengths`` (B,) gathers each sequence's true last-prompt-position
+    logits so right-padded ragged batches don't read a pad row.
     """
     cdt = compute_dtype(cfg)
     x = embed_apply(params["embed"], cfg, tokens)
@@ -309,7 +318,10 @@ def lm_prefill(
 
     x, cache = lax.scan(body, x, params["blocks"], unroll=flags.scan_unroll())
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = unembed_logits(params["embed"], cfg, x[:, -1:, :])[:, 0]
+    offset = extra_embeds.shape[1] if extra_embeds is not None else 0
+    logits = last_token_logits(
+        params["embed"], cfg, x, lengths=lengths, offset=offset
+    )
     return logits, cache
 
 
@@ -355,3 +367,116 @@ def lm_decode_step(
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed_logits(params["embed"], cfg, x)[:, 0]
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# serving: paged (block) KV cache
+# ---------------------------------------------------------------------------
+
+def _require_no_windows(cfg: ModelConfig) -> None:
+    if any(w is not None for w in layer_windows(cfg)):
+        raise NotImplementedError(
+            "paged KV cache covers global-attention layers only; "
+            f"{cfg.name} has sliding-window layers (window={cfg.window}, "
+            f"local_block={cfg.local_block}) — serve it with the static "
+            "engine, or page only the global layers (open follow-up)"
+        )
+
+
+def lm_paged_cache_init(cfg: ModelConfig, n_blocks: int, block_size: int):
+    """One shared block pool per scan position (+ logical specs).
+
+    Pool layout (n_steps, Hkv, n_blocks * block_size, Dh): block i owns
+    rows [i*bs, (i+1)*bs); block 0 is the trash block (see
+    :mod:`repro.serve.kvcache`).  Unlike ``lm_cache_init`` there is no
+    batch dimension — slots share the pool through their block tables, so
+    HBM is sized to the workload's live tokens, not slots × max_len.
+    """
+    _require_no_windows(cfg)
+    n_steps, per = _n_scan(cfg)
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    cdt = compute_dtype(cfg)
+    cache = {
+        f"pos{i}": {
+            "k": jnp.zeros((n_steps, hkv, n_blocks * block_size, dh), cdt),
+            "v": jnp.zeros((n_steps, hkv, n_blocks * block_size, dh), cdt),
+        }
+        for i in range(per)
+    }
+    spec = jax.tree_util.tree_map(
+        lambda _: ("layers", "kv_heads", None, None), cache
+    )
+    return cache, spec
+
+
+def lm_decode_step_paged(
+    params,
+    cfg: ModelConfig,
+    token: jax.Array,        # (B, 1) int32
+    pos: jax.Array,          # (B,) absolute position of `token`
+    tables: jax.Array,       # (B, M) int32 per-slot block tables
+    cache: PyTree,           # lm_paged_cache_init layout
+    block_size: int,
+) -> Tuple[jax.Array, PyTree]:
+    """One-token decode against the shared block pool.  → (logits, cache)."""
+    _require_no_windows(cfg)
+    x = embed_apply(params["embed"], cfg, token)
+    _, per = _n_scan(cfg)
+
+    def sub_decode(p, x, kv):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        attn, kv = attention_decode_paged(
+            p["attn"], cfg, h, pos, kv, tables, block_size
+        )
+        x = x + attn
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            y, _ = moe_mod.moe_apply(p["moe"], cfg, h, no_drop=True)
+        else:
+            y = mlp_apply(p["mlp"], cfg, h)
+        return x + y, kv
+
+    def body(x, xs):
+        blk, kvs = xs
+        new_kvs = {}
+        if per == 1:
+            x, kv = sub_decode(blk, x, kvs["pos0"])
+            new_kvs["pos0"] = kv
+        else:
+            for i in range(per):
+                sub = jax.tree_util.tree_map(lambda v: v[i], blk)
+                x, kv = sub_decode(sub, x, kvs[f"pos{i}"])
+                new_kvs[f"pos{i}"] = kv
+        return x, new_kvs
+
+    x, new_cache = lax.scan(
+        body, x, (params["blocks"], cache), unroll=flags.scan_unroll()
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed_logits(params["embed"], cfg, x)[:, 0]
+    return logits, new_cache
+
+
+def lm_paged_prefill_write(
+    cfg: ModelConfig,
+    cache: PyTree,           # lm_paged_cache_init layout
+    prefill_cache: PyTree,   # lm_cache_init layout, batch dim of 1
+    table_row: jax.Array,    # (M,) int32 block table of the admitted slot
+    block_size: int,
+) -> PyTree:
+    """Scatter one prefilled sequence's dense KV rows into the pool.
+
+    ``prefill_cache`` is what ``lm_prefill(..., max_len=bucket)`` built for
+    a batch of one; its ``bucket`` rows land at the slot's block-table
+    positions (rows past the allocated blocks resolve to the trash block,
+    and pad rows inside them are masked until decode overwrites).
+    """
+    _require_no_windows(cfg)
+
+    def write(pool, dense):
+        # pool (n_steps, Hkv, P, Dh); dense (n_steps, 1, Hkv, S, Dh)
+        return jax.vmap(
+            lambda pl, dn: paged_write_rows(pl, dn, table_row, block_size)
+        )(pool, dense[:, 0])
+
+    return jax.tree_util.tree_map(write, cache, prefill_cache)

@@ -1,0 +1,28 @@
+"""repro.serve — LM serving engines over the uniform model API.
+
+Two architectures share one greedy-token contract (outputs are
+byte-identical between them on a given prompt):
+
+Static batched engine (pad → prefill → decode till last finishes)
+                                  → :mod:`repro.serve.engine`
+Paged KV cache bookkeeping (block pool, free-list, block tables)
+                                  → :mod:`repro.serve.kvcache`
+Continuous batching (slot admission per decode step, EOS eviction,
+TTFT/inter-token SLO accounting)  → :mod:`repro.serve.scheduler`
+"""
+
+from .engine import Engine, GenerationResult, ServeConfig
+from .kvcache import TRASH_BLOCK, BlockManager, PagedCacheSpec, blocks_for
+from .scheduler import ContinuousEngine, ContinuousStats
+
+__all__ = [
+    "BlockManager",
+    "ContinuousEngine",
+    "ContinuousStats",
+    "Engine",
+    "GenerationResult",
+    "PagedCacheSpec",
+    "ServeConfig",
+    "TRASH_BLOCK",
+    "blocks_for",
+]

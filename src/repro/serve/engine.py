@@ -42,6 +42,11 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
+    # Host-sync cadence of the decode loop: emitted tokens accumulate in a
+    # device-side buffer and the all-done flag is polled only every
+    # ``sync_every`` steps (1 = poll every step, the old behavior; the
+    # token buffer itself transfers ONCE per generate call either way).
+    sync_every: int = 8
 
 
 @dataclasses.dataclass
@@ -84,6 +89,30 @@ class Engine:
             lambda p, batch: self.api.prefill(p, batch, max_len=scfg.max_len)
         )
         self._decode = jax.jit(self.api.decode_step, donate_argnums=(3,))
+        # Fused emit+decode step: token emission, EOS bookkeeping and the
+        # decode itself run in ONE jitted call that carries a device-side
+        # output buffer — no per-token host transfers (§Perf: the old loop
+        # pulled every token with int(cur[i, 0]), B transfers per step).
+        eos = self.tok.eos_id
+        pad = self.tok.pad_id
+
+        def fused(p, cur, pos, cache, out_buf, n_emit, done, t, key):
+            val = jnp.where(done[:, None], pad, cur)
+            out_buf = jax.lax.dynamic_update_slice(out_buf, val, (0, t))
+            n_emit = n_emit + (~done).astype(jnp.int32)
+            done = done | (cur[:, 0] == eos)
+            logits, cache = self.api.decode_step(p, cur, pos, cache)
+            if self.scfg.greedy:
+                nxt = jnp.argmax(logits, -1)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits / self.scfg.temperature, axis=-1
+                )
+            cur = nxt[:, None].astype(jnp.int32)
+            return cur, pos + 1, cache, out_buf, n_emit, done, key
+
+        self._fused_step = jax.jit(fused, donate_argnums=(3, 4, 5, 6))
 
     def _mesh_ctx(self):
         """The mesh context (activates the sharding rules) or a no-op."""
@@ -113,7 +142,13 @@ class Engine:
         prompts = [self.tok.encode(t, add_eos=False) for t in texts]
         toks, lens = self._pad_prompts(prompts)
         b, s = toks.shape
-        extras: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
+        extras: Dict[str, Any] = {
+            "tokens": jnp.asarray(toks),
+            # true prompt lengths: prefill gathers each sequence's OWN
+            # last-position logits, so ragged right-padded batches start
+            # greedy continuation correctly (not from a pad row)
+            "lengths": jnp.asarray(lens, jnp.int32),
+        }
         if self.cfg.family == "encdec":
             extras["frames"] = jnp.zeros(
                 (b, self.cfg.enc_frames, self.cfg.d_model), jnp.float32
@@ -130,41 +165,38 @@ class Engine:
         logits.block_until_ready()
         prefill_s = time.perf_counter() - t0
 
-        # NOTE: prompts shorter than the longest were padded — their "last
-        # logits" come from a pad position; for exactness serve same-length
-        # batches or re-prefill per bucket (bucketing is the production
-        # pattern).  Greedy continuation starts from each prompt's own end
-        # only when lengths are uniform; we surface this via prompt_len.
         offset = self.cfg.n_img_tokens or 0
         pos = jnp.asarray(lens + offset, jnp.int32)
         cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        done = np.zeros((b,), bool)
-        outs: List[List[int]] = [[] for _ in range(b)]
+        out_buf = jnp.full((b, self.scfg.max_new_tokens), self.tok.pad_id,
+                           jnp.int32)
+        n_emit = jnp.zeros((b,), jnp.int32)
+        done = jnp.zeros((b,), bool)
         key = jax.random.PRNGKey(self.scfg.seed)
 
+        # Decode loop: tokens accumulate device-side; the host polls only
+        # the all-done flag every ``sync_every`` steps and materializes the
+        # token buffer once after the loop.
         t1 = time.perf_counter()
         steps = 0
-        for _ in range(self.scfg.max_new_tokens):
-            for i in range(b):
-                if not done[i]:
-                    outs[i].append(int(cur[i, 0]))
-            done |= np.asarray(cur[:, 0] == self.tok.eos_id)
-            if done.all():
+        sync_every = max(1, self.scfg.sync_every)
+        for step in range(self.scfg.max_new_tokens):
+            if step % sync_every == 0 and step and bool(jnp.all(done)):
                 break
             with self._mesh_ctx():
-                logits, cache = self._decode(self.params, cur, pos, cache)
-            if self.scfg.greedy:
-                nxt = jnp.argmax(logits, -1)
-            else:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(
-                    sub, logits / self.scfg.temperature, axis=-1
+                cur, pos, cache, out_buf, n_emit, done, key = (
+                    self._fused_step(
+                        self.params, cur, pos, cache, out_buf, n_emit,
+                        done, np.int32(step), key,
+                    )
                 )
-            cur = nxt[:, None].astype(jnp.int32)
-            pos = pos + 1
             steps += 1
+        out_buf.block_until_ready()
         decode_s = time.perf_counter() - t1
 
+        out_np = np.asarray(out_buf)            # ONE transfer per flush
+        emitted = np.asarray(n_emit)
+        outs = [out_np[i, : emitted[i]].tolist() for i in range(b)]
         return [
             GenerationResult(
                 text=self.tok.decode(outs[i]),

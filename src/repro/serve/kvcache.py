@@ -1,0 +1,217 @@
+"""Paged KV cache bookkeeping: a free-list block allocator + block tables.
+
+The device side of the paged cache is a fixed-shape block pool per layer
+(:func:`repro.models.transformer.lm_paged_cache_init`): P = n_blocks ×
+block_size KV rows, where block ``i`` owns rows [i*bs, (i+1)*bs).  This
+module owns the HOST side: which blocks belong to which batch slot.  It
+is plain numpy/python — no jax — so admission decisions never touch the
+device, and the only thing the decode step uploads per iteration is the
+small (slots, max_blocks) int32 table.
+
+Design points (the paged-attention serving pattern):
+
+* **Fixed pool, free-list reuse.**  Blocks are preallocated once; alloc
+  pops from a LIFO free list and free pushes back, so slot churn reuses
+  hot HBM rows instead of fragmenting them.  Allocation order is
+  deterministic — byte-parity tests lean on a freed-and-reused table
+  producing the same gathers as a fresh one.
+* **Trash block 0.**  Table entries of unallocated positions (and whole
+  rows of inactive slots) point at reserved block 0.  Writes from masked
+  lanes land there harmlessly; reads from it are always masked by the
+  position-validity mask (``idx <= pos``), so its contents are never
+  observable.
+* **Reserve-at-admission.**  ``admit(slot, total_len)`` reserves every
+  block the request can touch (prompt + decode budget) up front.  A
+  request therefore either admits whole or waits — pool exhaustion is
+  admission backpressure, never a mid-decode stall that would need
+  preemption machinery.  (On-demand growth exists as ``grow`` for the
+  cache tests and future prefix-sharing work.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["BlockManager", "PagedCacheSpec", "TRASH_BLOCK", "blocks_for"]
+
+TRASH_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` KV rows."""
+    return max(0, -(-int(n_tokens) // block_size))
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheSpec:
+    """Static geometry of one paged cache pool."""
+
+    n_blocks: int           # total blocks incl. the reserved trash block
+    block_size: int
+    max_slots: int          # decode batch width
+    max_blocks_per_seq: int # block-table width M (view length = M * bs)
+
+    def __post_init__(self):
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        if self.n_blocks < 2:
+            raise ValueError("n_blocks must be >= 2 (block 0 is the trash block)")
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
+        if self.max_blocks_per_seq < 1:
+            raise ValueError("max_blocks_per_seq must be >= 1")
+
+    @property
+    def max_len(self) -> int:
+        """Longest sequence (prompt + generated) a slot can address."""
+        return self.max_blocks_per_seq * self.block_size
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.n_blocks - 1  # minus trash
+
+    @property
+    def pool_rows(self) -> int:
+        return self.n_blocks * self.block_size
+
+
+class BlockManager:
+    """Free-list allocator + per-slot block tables over a fixed pool."""
+
+    def __init__(self, spec: PagedCacheSpec):
+        self.spec = spec
+        # LIFO free list: lowest ids allocated first ⇒ deterministic reuse
+        self._free: List[int] = list(range(spec.n_blocks - 1, 0, -1))
+        self._allocated: set[int] = set()
+        self._tables = np.full(
+            (spec.max_slots, spec.max_blocks_per_seq), TRASH_BLOCK, np.int32
+        )
+        self._slot_blocks: Dict[int, List[int]] = {}
+        self.allocs = 0
+        self.frees = 0
+        self.alloc_failures = 0     # admission attempts refused (backpressure)
+        self.peak_in_use = 0
+
+    # -- raw block ops -------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` blocks, or None (and count a failure) if short."""
+        if n > len(self._free):
+            self.alloc_failures += 1
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self._allocated.update(blocks)
+        self.allocs += n
+        self.peak_in_use = max(self.peak_in_use, len(self._allocated))
+        return blocks
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b == TRASH_BLOCK:
+                raise ValueError("refusing to free the trash block")
+            if b not in self._allocated:
+                raise ValueError(f"double free of block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+            self.frees += 1
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    def can_admit(self, total_len: int) -> bool:
+        """Would ``admit`` succeed for a sequence of ``total_len`` tokens?"""
+        need = blocks_for(total_len, self.spec.block_size)
+        return need <= self.spec.max_blocks_per_seq and need <= len(self._free)
+
+    def admit(self, slot: int, total_len: int) -> bool:
+        """Reserve every block of a ``total_len``-token sequence for ``slot``.
+
+        Returns False (and leaves state untouched) when the pool can't
+        cover it — the caller keeps the request queued.
+        """
+        if slot in self._slot_blocks:
+            raise ValueError(f"slot {slot} is already admitted")
+        need = blocks_for(total_len, self.spec.block_size)
+        if need > self.spec.max_blocks_per_seq:
+            raise ValueError(
+                f"sequence of {total_len} tokens needs {need} blocks > "
+                f"table width {self.spec.max_blocks_per_seq} "
+                f"(max_len {self.spec.max_len})"
+            )
+        blocks = self.alloc(need)
+        if blocks is None:
+            return False
+        self._slot_blocks[slot] = blocks
+        self._tables[slot, :] = TRASH_BLOCK
+        self._tables[slot, : len(blocks)] = blocks
+        return True
+
+    def grow(self, slot: int, total_len: int) -> bool:
+        """Extend ``slot`` to cover ``total_len`` tokens (on-demand mode)."""
+        owned = self._slot_blocks.get(slot)
+        if owned is None:
+            raise ValueError(f"slot {slot} is not admitted")
+        need = blocks_for(total_len, self.spec.block_size)
+        if need > self.spec.max_blocks_per_seq:
+            raise ValueError(f"slot {slot}: {need} blocks exceed table width")
+        extra = need - len(owned)
+        if extra <= 0:
+            return True
+        blocks = self.alloc(extra)
+        if blocks is None:
+            return False
+        self._tables[slot, len(owned): len(owned) + extra] = blocks
+        owned.extend(blocks)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return a finished slot's blocks to the free list."""
+        blocks = self._slot_blocks.pop(slot, None)
+        if blocks is None:
+            raise ValueError(f"slot {slot} is not admitted")
+        self.free(blocks)
+        self._tables[slot, :] = TRASH_BLOCK
+
+    def slot_blocks(self, slot: int) -> List[int]:
+        return list(self._slot_blocks.get(slot, []))
+
+    @property
+    def tables(self) -> np.ndarray:
+        """The (max_slots, M) int32 block tables (live view — upload, don't
+        mutate)."""
+        return self._tables
+
+    def check(self) -> None:
+        """Assert the allocator invariants (tests + debug)."""
+        owned = [b for bs in self._slot_blocks.values() for b in bs]
+        assert len(owned) == len(set(owned)), "block owned by two slots"
+        # raw alloc() without a slot assignment is legal (mid-admission),
+        # but a slot must never own a block the allocator doesn't know
+        assert set(owned) <= self._allocated, "slot owns unallocated block"
+        assert not (set(self._free) & self._allocated), "block both free and used"
+        assert len(self._free) + len(self._allocated) == self.spec.n_blocks - 1
+        assert TRASH_BLOCK not in self._allocated
+        live = set(np.unique(self._tables)) - {TRASH_BLOCK}
+        assert live <= self._allocated, "table points at unallocated block"
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "n_blocks": self.spec.n_blocks,
+            "block_size": self.spec.block_size,
+            "in_use": self.n_in_use,
+            "free": self.n_free,
+            "allocs": self.allocs,
+            "frees": self.frees,
+            "alloc_failures": self.alloc_failures,
+            "peak_in_use": self.peak_in_use,
+        }

@@ -1,0 +1,490 @@
+"""Token-level continuous batching over the paged KV cache.
+
+The static :class:`~repro.serve.engine.Engine` serves a batch the way the
+dry-run does: pad every prompt to a common length, prefill once, decode
+until the LAST sequence finishes.  Real serving traffic is ragged — a
+handful of long generations pin the batch while short ones sit finished
+in their rows, and newly arrived requests wait for the whole batch to
+drain.  This module decouples sequence lifetime from batch lifetime:
+
+* **Paged KV cache.**  Each slot's cache rows live in fixed-size blocks
+  of a preallocated pool (:mod:`repro.serve.kvcache`), addressed through
+  a per-slot block table.  Admitting or evicting a sequence edits the
+  table — never reshapes device state — so the jitted decode step traces
+  exactly once for the lifetime of the engine.
+* **Slot admission, EOS eviction.**  Between decode steps the leader
+  admits queued prefills into free batch slots (reserve-at-admission:
+  a request either gets every block it can touch or stays queued — pool
+  exhaustion is pure backpressure) and evicts finished sequences, whose
+  blocks return to the free list for the next admit.
+* **Leader-combining decode loop** (ported from
+  :class:`repro.service.scheduler.MicroBatcher`): there is no engine
+  thread.  The submitting thread that finds no leader becomes the
+  leader and runs admit→decode→evict for *everyone* until no work
+  remains; arrivals during a step join at the next step boundary.  A
+  lone caller therefore pays zero coordination latency, and leadership
+  hands off through the lock-release/re-check dance rather than a
+  parked-thread wakeup.
+
+Emission is byte-compatible with the static engine's greedy path: the
+first token is the argmax of the prefill logits at the true last prompt
+position, decode feeds token *k* at position ``len + k - 1``, and a
+sequence stops after emitting EOS or ``max_new_tokens`` tokens.  On a
+uniform batch the two engines produce identical ``token_ids``
+(``tests/test_continuous_batching.py`` pins this bitwise).
+
+Per-request SLO accounting records time-to-first-token (submit → prefill
+argmax) and inter-token latency (consecutive decode materializations) in
+bounded windows; ``slo_ms()`` reports p50/p99 of both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.registry import build_model
+from repro.serve.engine import GenerationResult, ServeConfig
+from repro.serve.kvcache import BlockManager, PagedCacheSpec, blocks_for
+
+__all__ = ["ContinuousEngine", "ContinuousStats"]
+
+# Bounded windows for TTFT / inter-token latency percentiles.
+_SLO_WINDOW = 8192
+
+
+@dataclasses.dataclass
+class ContinuousStats:
+    """Cumulative scheduler counters (allocator stats live on the manager)."""
+
+    requests: int = 0
+    completed: int = 0
+    failed: int = 0             # futures resolved with an exception
+    cancelled: int = 0          # queued requests cancelled at close()
+    prefills: int = 0
+    steps: int = 0              # batched decode steps executed
+    tokens_out: int = 0         # tokens emitted across all requests
+    decode_tokens: int = 0      # tokens emitted by decode steps (excl. first)
+    admission_stalls: int = 0   # head-of-queue blocked on slots or blocks
+    peak_active: int = 0
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Mean kept tokens per decode step (≤ max_slots; lane occupancy)."""
+        return self.decode_tokens / self.steps if self.steps else 0.0
+
+
+class _Seq:
+    """Host-side state of one admitted sequence (leader-thread only)."""
+
+    __slots__ = (
+        "future", "prompt_len", "budget", "tokens", "t_submit",
+        "prefill_s", "t_first", "t_last", "fed",
+    )
+
+    def __init__(self, future, prompt_len, budget, t_submit, prefill_s, now):
+        self.future: "Future[GenerationResult]" = future
+        self.prompt_len = prompt_len
+        self.budget = budget
+        self.tokens: List[int] = []
+        self.t_submit = t_submit
+        self.prefill_s = prefill_s
+        self.t_first = now
+        self.t_last = now
+        self.fed = 0            # decode steps this sequence was fed into
+
+
+class _Request:
+    __slots__ = ("prompt", "budget", "future", "t_submit")
+
+    def __init__(self, prompt: List[int], budget: int):
+        self.prompt = prompt
+        self.budget = budget
+        self.future: "Future[GenerationResult]" = Future()
+        self.t_submit = time.perf_counter()
+
+
+class ContinuousEngine:
+    """``submit(text) -> Future`` serving over a paged pool of decode slots.
+
+    Greedy-only (continuous batching re-orders lanes between steps, so a
+    shared sampling key would make outputs depend on co-residents; greedy
+    keeps every sequence's tokens a pure function of its own prompt —
+    which is also what the byte-parity tests against the static engine
+    pin).  ``generate(texts)`` is a thin batch wrapper: enqueue all, lead
+    once, gather in order.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        spec: PagedCacheSpec,
+        scfg: ServeConfig = ServeConfig(),
+    ):
+        if not scfg.greedy:
+            raise NotImplementedError(
+                "continuous batching is greedy-only (lane composition "
+                "changes between steps; a shared sampling key would make "
+                "outputs depend on co-scheduled requests)"
+            )
+        self.cfg = cfg
+        self.api = build_model(cfg)
+        if not self.api.supports_paged:
+            raise ValueError(
+                f"model family {cfg.family!r} (windows="
+                f"{getattr(cfg, 'window', None)}) has no paged-KV decode "
+                "path; use the static Engine"
+            )
+        self.spec = spec
+        self.scfg = scfg
+        self.params = params
+        self.tok = ByteTokenizer()
+        self.stats = ContinuousStats()
+        self._offset = cfg.n_img_tokens or 0
+
+        self._mgr = BlockManager(spec)
+        self._cache, _ = self.api.paged_cache_init(spec.n_blocks, spec.block_size)
+
+        # Fixed-shape batched decode: admission/eviction only edit the
+        # block tables and the (S,) token/pos vectors, so this traces once.
+        bs = spec.block_size
+
+        def step(p, cur, pos, tables, cache):
+            logits, cache = self.api.decode_step_paged(
+                p, cur, pos, tables, cache, bs
+            )
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        self._step = jax.jit(step, donate_argnums=(4,))
+        self._prefill = jax.jit(
+            lambda p, b: self.api.prefill(p, b, max_len=spec.max_len)
+        )
+        self._write = jax.jit(
+            lambda c, pc, row: self.api.paged_prefill_write(c, pc, row, bs),
+            donate_argnums=(0,),
+        )
+
+        # Leader-only decode state (no lock: exactly one leader at a time).
+        self._cur = np.zeros((spec.max_slots, 1), np.int32)
+        self._pos = np.zeros((spec.max_slots,), np.int32)
+        self._active: Dict[int, _Seq] = {}
+        self._free_slots: List[int] = list(range(spec.max_slots - 1, -1, -1))
+        self._tables_dev = jnp.asarray(self._mgr.tables)
+        self._tables_dirty = False
+
+        self._lock = threading.Lock()      # queue, stop flag, SLO windows
+        self._leader = threading.Lock()    # at most one decode loop
+        self._queue: Deque[_Request] = deque()
+        self._stop = False
+        self._ttft_ms: Deque[float] = deque(maxlen=_SLO_WINDOW)
+        self._itl_ms: Deque[float] = deque(maxlen=_SLO_WINDOW)
+
+    # -- client surface ------------------------------------------------------
+
+    def submit(
+        self, text: str, max_new_tokens: Optional[int] = None, lead: bool = True
+    ) -> "Future[GenerationResult]":
+        """Enqueue one prompt; the future resolves to a GenerationResult.
+
+        The calling thread may transparently become the leader and run
+        the decode loop for every queued and active request until no
+        work remains (``lead=False`` only enqueues — ``generate`` uses
+        it to stage a batch before leading once).
+        """
+        budget = max_new_tokens or self.scfg.max_new_tokens
+        req = _Request(self.tok.encode(text, add_eos=False), budget)
+        total = self._offset + len(req.prompt) + budget - 1
+        if budget < 1:
+            req.future.set_exception(ValueError("max_new_tokens must be >= 1"))
+            return req.future
+        if total > self.spec.max_len:
+            req.future.set_exception(
+                ValueError(
+                    f"prompt+budget needs {total} cache rows > max_len "
+                    f"{self.spec.max_len} "
+                    f"({self.spec.max_blocks_per_seq} blocks × "
+                    f"{self.spec.block_size})"
+                )
+            )
+            return req.future
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("engine is closed")
+            self._queue.append(req)
+            self.stats.requests += 1
+        if lead:
+            self._maybe_lead()
+        return req.future
+
+    def generate(
+        self, texts: List[str], max_new_tokens: Optional[int] = None
+    ) -> List[GenerationResult]:
+        """Batch wrapper: enqueue everything, lead once, gather in order."""
+        futs = [self.submit(t, max_new_tokens, lead=False) for t in texts]
+        self._maybe_lead()
+        return [f.result() for f in futs]
+
+    # -- leader-combining decode loop ----------------------------------------
+
+    def _maybe_lead(self) -> None:
+        # Non-blocking: if a leader exists it will admit our request at
+        # its next step boundary.  The re-check loop closes the race
+        # where the old leader saw an empty queue and was releasing just
+        # as we enqueued.
+        while True:
+            with self._lock:
+                work = bool(self._queue) and not self._stop
+            if not work or not self._leader.acquire(blocking=False):
+                return
+            try:
+                self._run_loop()
+            finally:
+                self._leader.release()
+
+    def _run_loop(self) -> None:
+        """Admit → decode one token for every active slot → evict; repeat.
+
+        Runs on the submitting thread that won leadership.  An exception
+        (OOM, poisoned weights) is delivered to every *active* future —
+        a dying leader must not strand callers — then swallowed so it
+        can't tear down an unrelated client thread; queued requests stay
+        queued for the next leader.
+        """
+        try:
+            while True:
+                self._admit()
+                if not self._active:
+                    with self._lock:
+                        if not self._queue or self._stop:
+                            return
+                    continue  # backpressure cleared by an eviction race
+                self._decode_once()
+        except BaseException as e:  # noqa: BLE001 — delivered first
+            for slot, seq in list(self._active.items()):
+                if not seq.future.done():
+                    seq.future.set_exception(e)
+                self.stats.failed += 1
+                self._mgr.release(slot)
+                self._free_slots.append(slot)
+            self._active.clear()
+            self._tables_dirty = True
+            if isinstance(e, (SystemExit, KeyboardInterrupt)):
+                raise
+
+    def _admit(self) -> None:
+        """Move queued requests into free slots, strictly FIFO.
+
+        Head-of-line blocking is deliberate: skipping a big request to
+        admit later small ones would starve it under sustained load, and
+        FIFO keeps the backpressure tests deterministic.
+        """
+        while self._free_slots:
+            with self._lock:
+                if self._stop or not self._queue:
+                    return
+                req = self._queue[0]
+                total = self._offset + len(req.prompt) + req.budget - 1
+                if not self._mgr.can_admit(total):
+                    if self._active:
+                        # an eviction will free blocks: wait at the head
+                        self.stats.admission_stalls += 1
+                        return
+                    # leader is the sole allocator, so an idle pool is a
+                    # FULL pool — this request can never fit; stalling
+                    # here would spin the loop forever
+                    self._queue.popleft()
+                    self.stats.failed += 1
+                    req.future.set_exception(
+                        RuntimeError(
+                            f"request needs {blocks_for(total, self.spec.block_size)} "
+                            f"blocks but the pool only has "
+                            f"{self.spec.usable_blocks} usable"
+                        )
+                    )
+                    continue
+                self._queue.popleft()
+            if not req.future.set_running_or_notify_cancel():
+                with self._lock:
+                    self.stats.cancelled += 1
+                continue
+            self._admit_one(req, total)
+        # no free slot for the head request: wait for an eviction
+
+    def _admit_one(self, req: _Request, total: int) -> None:
+        prompt, budget = req.prompt, req.budget
+        L = len(prompt)
+        # Pad prompts up to a block-size multiple so distinct lengths
+        # share prefill traces; the dense cache is always max_len rows
+        # (what the paged write scatters), so this is the only retrace
+        # axis.  Pad rows beyond ``lengths`` are overwritten by decode
+        # before any read can see them — same invariant the static
+        # engine's ragged batches rely on.
+        bucket = min(
+            self.spec.max_len - self._offset,
+            blocks_for(L, self.spec.block_size) * self.spec.block_size,
+        )
+        toks = np.full((1, bucket), self.tok.pad_id, np.int32)
+        toks[0, :L] = prompt
+        batch: Dict[str, Any] = {
+            "tokens": jnp.asarray(toks),
+            "lengths": jnp.asarray([L], jnp.int32),
+        }
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (1, self.cfg.n_img_tokens, self.cfg.d_model), jnp.float32
+            )
+        t0 = time.perf_counter()
+        logits, dense = self._prefill(self.params, batch)
+        first = int(jnp.argmax(logits[0]))
+        now = time.perf_counter()
+        prefill_s = now - t0
+        self.stats.prefills += 1
+        with self._lock:
+            self._ttft_ms.append((now - req.t_submit) * 1e3)
+        self.stats.tokens_out += 1
+
+        if first == self.tok.eos_id or budget == 1:
+            # Entirely served by prefill: never occupies a slot or blocks.
+            self.stats.completed += 1
+            req.future.set_result(
+                self._result([first], L, 0, prefill_s, 0.0)
+            )
+            return
+
+        slot = self._free_slots.pop()
+        admitted = self._mgr.admit(slot, total)
+        assert admitted, "can_admit passed but admit failed (leader is sole allocator)"
+        row = jnp.asarray(self._mgr.tables[slot])
+        self._cache = self._write(self._cache, dense, row)
+        seq = _Seq(req.future, L, budget, req.t_submit, prefill_s, now)
+        seq.tokens.append(first)
+        self._cur[slot, 0] = first
+        self._pos[slot] = self._offset + L
+        self._active[slot] = seq
+        self._tables_dirty = True
+        self.stats.peak_active = max(self.stats.peak_active, len(self._active))
+
+    def _decode_once(self) -> None:
+        """One batched paged decode step + host-side emit/evict."""
+        if self._tables_dirty:
+            self._tables_dev = jnp.asarray(self._mgr.tables)
+            self._tables_dirty = False
+        nxt, self._cache = self._step(
+            self.params,
+            jnp.asarray(self._cur),
+            jnp.asarray(self._pos),
+            self._tables_dev,
+            self._cache,
+        )
+        nxt = np.asarray(nxt)  # the one host sync per step: (S,) int32
+        now = time.perf_counter()
+        self.stats.steps += 1
+        for slot, seq in list(self._active.items()):
+            tok = int(nxt[slot])
+            seq.fed += 1
+            seq.tokens.append(tok)
+            with self._lock:
+                self._itl_ms.append((now - seq.t_last) * 1e3)
+            seq.t_last = now
+            self.stats.tokens_out += 1
+            self.stats.decode_tokens += 1
+            if tok == self.tok.eos_id or len(seq.tokens) >= seq.budget:
+                self._evict(slot, seq, now)
+            else:
+                self._cur[slot, 0] = tok
+                self._pos[slot] += 1
+
+    def _evict(self, slot: int, seq: _Seq, now: float) -> None:
+        self._mgr.release(slot)
+        self._tables_dirty = True
+        del self._active[slot]
+        self._free_slots.append(slot)
+        self._cur[slot, 0] = 0
+        self._pos[slot] = 0
+        self.stats.completed += 1
+        seq.future.set_result(
+            self._result(
+                seq.tokens, seq.prompt_len, seq.fed, seq.prefill_s,
+                now - seq.t_first,
+            )
+        )
+
+    def _result(self, tokens, prompt_len, steps, prefill_s, decode_s):
+        return GenerationResult(
+            text=self.tok.decode(tokens),
+            token_ids=list(tokens),
+            prompt_len=prompt_len,
+            steps=steps,
+            prefill_s=prefill_s,
+            decode_s=decode_s,
+        )
+
+    # -- accounting ----------------------------------------------------------
+
+    def slo_ms(self) -> Dict[str, float]:
+        """TTFT and inter-token latency percentiles (bounded windows)."""
+        with self._lock:
+            ttft = list(self._ttft_ms)
+            itl = list(self._itl_ms)
+
+        def pct(xs: List[float], p: float) -> float:
+            return float(np.percentile(xs, p)) if xs else 0.0
+
+        return {
+            "ttft_p50_ms": pct(ttft, 50),
+            "ttft_p99_ms": pct(ttft, 99),
+            "itl_p50_ms": pct(itl, 50),
+            "itl_p99_ms": pct(itl, 99),
+            "ttft_mean_ms": float(np.mean(ttft)) if ttft else 0.0,
+            "itl_mean_ms": float(np.mean(itl)) if itl else 0.0,
+        }
+
+    def reset_slo(self) -> None:
+        """Drop the SLO windows (benchmarks: exclude warmup/compile TTFT)."""
+        with self._lock:
+            self._ttft_ms.clear()
+            self._itl_ms.clear()
+
+    def counters(self) -> Dict[str, float]:
+        """Flat cumulative counters (loadgen ``counters_fn`` shape)."""
+        out = {k: float(v) for k, v in dataclasses.asdict(self.stats).items()}
+        out["tokens_per_step"] = self.stats.tokens_per_step
+        out.update({f"blk_{k}": float(v) for k, v in self._mgr.stats().items()})
+        return out
+
+    # -- shutdown ------------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop admitting; cancel queued requests; wait out the leader.
+
+        Active sequences finish their decode (bounded by the largest
+        remaining budget) — the leader keeps decoding but admits nothing
+        once the stop flag is up.
+        """
+        with self._lock:
+            if self._stop:
+                return
+            self._stop = True
+            for req in self._queue:
+                if req.future.cancel():
+                    self.stats.cancelled += 1
+            self._queue.clear()
+        with self._leader:
+            pass  # leader drains its active set, then we own shutdown
+
+    def __enter__(self) -> "ContinuousEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
