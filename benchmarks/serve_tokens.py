@@ -22,11 +22,21 @@ tokens/sec measures *sustained* load, not a single drag race.  Delivered
 tokens (what callers keep) count for both arms; the static arm's
 overshoot past a request's budget is exactly the waste being measured.
 
+A third arm measures **prefix-cache sharing**: a workload whose prompts
+all extend one long stem (the shared-system-prompt / shared-document
+serving shape) is served by two :class:`ContinuousEngine`\\ s over the
+same weights — prefix cache on vs off.  The on-engine adopts the stem's
+resident KV blocks at admission and prefills only the per-request tail,
+so its throughput advantage is pure prefill compute saved; outputs are
+byte-identical between the arms (suffix prefill is bit-exact).
+
 Byte parity is asserted before any throughput is reported: a uniform
-batch must match the static engine token-for-token, and a ragged mix
-must match per-prompt serial generation.  ``benchmarks/run.py`` writes
-:func:`last_metrics` to ``BENCH_serve.json``; the headline gate is
-``ragged.speedup >= 2`` with ``parity`` true.
+batch must match the static engine token-for-token, a ragged mix must
+match per-prompt serial generation, and the shared-prefix mix must be
+byte-identical with sharing on vs off.  ``benchmarks/run.py`` writes
+:func:`last_metrics` to ``BENCH_serve.json``; the headline gates are
+``ragged.speedup >= 2`` and ``shared_prefix.speedup >= 1.5`` with every
+parity flag true.
 
 Env knobs: ``REPRO_BENCH_SERVE_SECONDS`` (per-arm window),
 ``REPRO_BENCH_SERVE_SLOTS`` (decode batch width / slot count).
@@ -52,6 +62,12 @@ SHORT_BUDGETS = (2, 3, 4, 5, 6)
 LONG_BUDGET = 48
 LONG_FRACTION = 0.2
 UNIFORM_BUDGET = 12
+# shared-prefix arm: prompts = one long stem + a short unique tail, so
+# almost all prefill FLOPs are in the (shareable) stem
+STEM_BLOCKS = 32                # stem spans exactly this many full blocks
+PREFIX_TAILS = 16               # distinct request tails over the stem
+PREFIX_BUDGETS = (2, 3, 4)
+PREFIX_BLOCKS_PER_SEQ = 36      # table width of the shared-prefix spec
 
 _LAST: Optional[Dict[str, object]] = None
 
@@ -76,6 +92,26 @@ def _prompts() -> List[str]:
     rng = random.Random(11)
     stem = "InChI=1S/C8H10N4O2/c1-10-4"
     return [stem[: rng.randrange(8, 25)] for _ in range(48)]
+
+
+def _prefix_pool() -> List[Tuple[str, int]]:
+    """Shared-prefix workload: every prompt extends the same long stem.
+
+    The stem is sized so BOS + stem fills exactly ``STEM_BLOCKS`` full
+    blocks — the whole stem is block-aligned and adoptable; only the
+    2-char tail (plus the budget) ever needs fresh blocks.
+    """
+    base = (
+        "InChI=1S/C27H46O/c1-18(2)7-6-8-19(3)23-11-12-24-22-10-9-20-17-"
+        "21(28)13-15-26(20,4)25(22)14-16-27(23,24)5/h17-19,21-25,28H;"
+    )
+    stem = (base * 4)[: STEM_BLOCKS * BLOCK_SIZE - 1]   # -1: BOS token
+    rng = random.Random(37)
+    pool = []
+    for i in range(64):
+        tail = f"{i % PREFIX_TAILS:02d}"
+        pool.append((stem + tail, rng.choice(PREFIX_BUDGETS)))
+    return pool
 
 
 def _ragged_pool(prompts: List[str]) -> List[Tuple[str, int]]:
@@ -277,6 +313,68 @@ def run() -> List[str]:
         f"{uniform['static']['tokens_per_s']:.0f} tok/s "
         f"({uniform['speedup']:.2f}x) at uniform budget {UNIFORM_BUDGET}"))
 
+    # -- shared-prefix mix: prefix cache on vs off -------------------------
+    spec_p = PagedCacheSpec(
+        n_blocks=MAX_SLOTS * PREFIX_BLOCKS_PER_SEQ + PREFIX_BLOCKS_PER_SEQ + 8,
+        block_size=BLOCK_SIZE, max_slots=MAX_SLOTS,
+        max_blocks_per_seq=PREFIX_BLOCKS_PER_SEQ,
+    )
+    scfg_p = ServeConfig(
+        max_new_tokens=max(PREFIX_BUDGETS), max_len=spec_p.max_len,
+        greedy=True,
+    )
+    pfx_on = ContinuousEngine(cfg, params, spec_p, scfg_p, prefix_cache=True)
+    pfx_off = ContinuousEngine(cfg, params, spec_p, scfg_p, prefix_cache=False)
+    ppool = _prefix_pool()
+    ptexts = [t for t, _ in ppool[:PREFIX_TAILS]]
+
+    # parity gate first (doubles as trace warmup for both arms): sharing
+    # must never change a byte
+    want_p = [r.token_ids for r in pfx_off.generate(ptexts)]
+    got_p = [r.token_ids for r in pfx_on.generate(ptexts)]
+    pparity = got_p == want_p
+    out.append(row(
+        "serve.prefix_parity", 0.0,
+        f"shared-prefix bytes, cache on vs off: "
+        f"{'ok' if pparity else 'BROKEN'}"))
+    pfx_on.reset_slo()
+
+    rep_off = run_closed_loop(
+        lambda ks: pfx_off.submit(ks[0][0], max_new_tokens=ks[0][1]).result(),
+        ppool, clients=CLIENTS, duration_s=DURATION_S / 2,
+        keys_per_request=1, counters_fn=pfx_off.counters,
+    )
+    rep_on = run_closed_loop(
+        lambda ks: pfx_on.submit(ks[0][0], max_new_tokens=ks[0][1]).result(),
+        ppool, clients=CLIENTS, duration_s=DURATION_S / 2,
+        keys_per_request=1, counters_fn=pfx_on.counters,
+    )
+    on_c = pfx_on.counters()
+    shared_prefix = {
+        "off": _arm_report(rep_off, rep_off.counters["tokens_out"]),
+        "on": _arm_report(rep_on, rep_on.counters["tokens_out"]),
+        "parity": bool(pparity),
+        "prefix_hit_rate": on_c["prefix_hit_rate"],
+        "prefix_hits": on_c["prefix_hits"],
+        "prefill_tokens_saved": on_c["prefill_tokens_saved"],
+        "index_entries": on_c["pfx_entries"],
+        "index_evictions": on_c["pfx_evictions"],
+        "stem_tokens": STEM_BLOCKS * BLOCK_SIZE,
+    }
+    shared_prefix["speedup"] = (
+        shared_prefix["on"]["tokens_per_s"]
+        / max(shared_prefix["off"]["tokens_per_s"], 1e-9)
+    )
+    out.append(row(
+        "serve.prefix_shared", rep_on.seconds,
+        f"{shared_prefix['on']['tokens_per_s']:.0f} tok/s cache-on vs "
+        f"{shared_prefix['off']['tokens_per_s']:.0f} off "
+        f"({shared_prefix['speedup']:.1f}x), hit rate "
+        f"{on_c['prefix_hit_rate']:.2f}, "
+        f"{on_c['prefill_tokens_saved']:.0f} prefill tokens saved"))
+    pfx_on.close()
+    pfx_off.close()
+
     sched = cont.counters()
     _LAST = {
         "config": {
@@ -290,6 +388,10 @@ def run() -> List[str]:
             "long_budget": LONG_BUDGET,
             "long_fraction": LONG_FRACTION,
             "uniform_budget": UNIFORM_BUDGET,
+            "stem_blocks": STEM_BLOCKS,
+            "prefix_tails": PREFIX_TAILS,
+            "prefix_budgets": list(PREFIX_BUDGETS),
+            "prefix_blocks_per_seq": PREFIX_BLOCKS_PER_SEQ,
             "model": {
                 "n_layers": cfg.n_layers, "d_model": cfg.d_model,
                 "n_heads": cfg.n_heads, "vocab_size": cfg.vocab_size,
@@ -297,12 +399,15 @@ def run() -> List[str]:
         },
         "ragged": ragged,
         "uniform": uniform,
+        "shared_prefix": shared_prefix,
         "slo": slo,
         "scheduler": {
             k: sched[k]
             for k in ("requests", "completed", "steps", "tokens_out",
                       "decode_tokens", "prefills", "admission_stalls",
-                      "peak_active", "tokens_per_step")
+                      "peak_active", "tokens_per_step", "prefix_hits",
+                      "prefix_misses", "prefix_hit_rate",
+                      "prefill_tokens_saved")
         },
         "allocator": {
             k: sched[f"blk_{k}"]

@@ -307,15 +307,40 @@ cont._maybe_lead()
 for (t, b), f in zip(ragged, futs):
     assert f.result(timeout=300).token_ids == \
         static.generate([t])[0].token_ids[:b], f"ragged diverged on {t!r}"
-cont._mgr.check()
+cont.check()   # exact: slot holds + prefix-index holds == every refcount
+st = cont._mgr.stats()
+# after the last release only the prefix index pins blocks; dropping it
+# must return the pool to empty with allocs balancing frees
+held = len(cont._index.block_refs()) if cont._index is not None else 0
+assert st["in_use"] == held, (st, held)
+if cont._index is not None:
+    cont._index.clear()
 st = cont._mgr.stats()
 assert st["in_use"] == 0 and st["allocs"] == st["frees"], st
 slo = cont.slo_ms()
 assert slo["ttft_p50_ms"] > 0 and slo["itl_p50_ms"] > 0, slo
 cont.close()
+# prefix-cache sharing must save prefill work without changing a byte
+shared = ["InChI=1S/C8H9NO2/c1-6(10)9-7-2-4-8(11)5-3-7;" + t
+          for t in ("a", "bb", "a")]
+on = ContinuousEngine(cfg, params, spec,
+                      ServeConfig(max_new_tokens=8, max_len=64, greedy=True),
+                      prefix_cache=True)
+off = ContinuousEngine(cfg, params, spec,
+                       ServeConfig(max_new_tokens=8, max_len=64, greedy=True),
+                       prefix_cache=False)
+want = [r.token_ids for r in off.generate(shared)]
+got = [r.token_ids for r in on.generate(shared)]
+assert got == want, "prefix sharing changed emitted bytes"
+assert on.stats.prefix_hits >= 2 and on.stats.prefill_tokens_saved > 0, \
+    on.counters()
+on.check()
+saved = on.stats.prefill_tokens_saved
+on.close(); off.close()
 print(f"serve smoke OK: {len(texts)} uniform + {len(ragged)} ragged requests "
       f"byte-identical to the static engine; {st['allocs']} block allocs "
-      f"all returned, itl p50 {slo['itl_p50_ms']:.2f} ms")
+      f"all returned, itl p50 {slo['itl_p50_ms']:.2f} ms; prefix cache "
+      f"saved {saved} prefill tokens with byte parity")
 PY
 
 echo "== similarity smoke: Tanimoto kernel (interpret) vs oracle =="
@@ -405,13 +430,19 @@ test -s "$BENCH_SRV_JSON" || { echo "BENCH_serve.json not produced"; exit 1; }
 python - "$BENCH_SRV_JSON" <<'PY'
 import json, sys
 m = json.load(open(sys.argv[1]))
-for key in ("ragged", "uniform", "slo", "scheduler", "allocator", "parity"):
+for key in ("ragged", "uniform", "shared_prefix", "slo", "scheduler",
+            "allocator", "parity"):
     assert key in m, f"BENCH_serve.json missing {key!r}"
 assert m["parity"] is True, "continuous engine diverged from static"
+assert m["shared_prefix"]["parity"] is True, \
+    "prefix sharing changed bytes"
+assert m["shared_prefix"]["prefix_hit_rate"] > 0, \
+    "shared-prefix mix never hit the prefix cache"
 assert m["slo"]["ttft_p50_ms"] > 0 and m["slo"]["itl_p50_ms"] > 0, m["slo"]
 print(f"BENCH_serve.json OK: continuous "
       f"{m['ragged']['continuous']['tokens_per_s']:.0f} tok/s "
       f"({m['ragged']['speedup']:.1f}x static on the ragged mix), "
+      f"prefix hit rate {m['shared_prefix']['prefix_hit_rate']:.2f}, "
       f"itl p50 {m['slo']['itl_p50_ms']:.2f} ms")
 PY
 rm -f "$BENCH_OUT" "$BENCH_JSON" "$BENCH_SVC_JSON" "$BENCH_SIM_JSON" \
@@ -468,11 +499,18 @@ python - BENCH_serve.json <<'PY'
 import json, sys
 m = json.load(open(sys.argv[1]))
 speedup, parity, slo = m["ragged"]["speedup"], m["parity"], m["slo"]
+pfx = m["shared_prefix"]
 errs = []
 if parity is not True:
     errs.append("parity flag is not true (continuous vs static diverged)")
 if speedup < 2.0:
     errs.append(f"ragged speedup {speedup:.2f}x < 2x floor")
+if pfx["parity"] is not True:
+    errs.append("shared_prefix parity is not true (sharing changed bytes)")
+if pfx["speedup"] < 1.5:
+    errs.append(f"shared_prefix speedup {pfx['speedup']:.2f}x < 1.5x floor")
+if not pfx["prefix_hit_rate"] > 0:
+    errs.append("shared_prefix hit rate is zero (index never matched)")
 if not (slo["ttft_p50_ms"] > 0 and slo["itl_p50_ms"] > 0
         and slo["itl_p99_ms"] >= slo["itl_p50_ms"]):
     errs.append(f"SLO percentiles unpopulated or inconsistent: {slo}")
@@ -484,9 +522,10 @@ if errs:
           "box and commit the refreshed metrics, or fix the decode loop.")
     sys.exit(1)
 print(f"serve gate OK: {m['ragged']['continuous']['tokens_per_s']:.0f} tok/s "
-      f"continuous ({speedup:.1f}x static ragged), ttft p50 "
-      f"{slo['ttft_p50_ms']:.1f} ms, itl p50 {slo['itl_p50_ms']:.2f} ms, "
-      f"parity true")
+      f"continuous ({speedup:.1f}x static ragged), shared-prefix "
+      f"{pfx['speedup']:.1f}x at hit rate {pfx['prefix_hit_rate']:.2f}, "
+      f"ttft p50 {slo['ttft_p50_ms']:.1f} ms, itl p50 "
+      f"{slo['itl_p50_ms']:.2f} ms, parity true")
 PY
 
 echo "== all checks passed =="

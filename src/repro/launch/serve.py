@@ -13,8 +13,11 @@ in the model takes effect.  The default ("1x1") stays single-device.
 instead (:mod:`repro.serve.scheduler`): prompts are submitted as
 independent requests that admit into ``--max-slots`` decode lanes backed
 by ``--block-size`` KV blocks, and the report adds the TTFT/inter-token
-SLO percentiles.  Continuous mode is single-device and greedy-only
-(``--mesh`` other than 1x1 is rejected rather than silently ignored).
+SLO percentiles plus the prefix-cache hit counters.  Prompts sharing a
+block-aligned prefix share its KV via the prefix cache (on by default;
+``--no-prefix-cache`` disables sharing — outputs are byte-identical
+either way).  Continuous mode is single-device (``--mesh`` other than
+1x1 is rejected rather than silently ignored).
 """
 
 from __future__ import annotations
@@ -44,6 +47,11 @@ def main():
                     help="decode batch width of the continuous engine")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV rows per paged-cache block")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share block-aligned prompt prefixes across "
+                         "requests (continuous mode; byte-identical output "
+                         "either way)")
     ap.add_argument("--prompts", nargs="*", default=[
         "InChI=1S/C12H22O2/", "InChI=1S/C8H9NO2/",
     ])
@@ -66,8 +74,11 @@ def main():
                 "(windowed attention or non-transformer family); "
                 "drop --continuous")
         m = blocks_for(args.max_len, args.block_size)
+        # headroom past full slot occupancy keeps prefix-index entries
+        # resident between requests instead of thrashing under pressure
+        headroom = m if args.prefix_cache else 0
         spec = PagedCacheSpec(
-            n_blocks=args.max_slots * m + 2,   # full occupancy + trash
+            n_blocks=args.max_slots * m + headroom + 2,  # + trash
             block_size=args.block_size,
             max_slots=args.max_slots,
             max_blocks_per_seq=m,
@@ -76,6 +87,7 @@ def main():
             cfg, params, spec,
             ServeConfig(max_new_tokens=args.max_new_tokens,
                         max_len=spec.max_len),
+            prefix_cache=args.prefix_cache,
         )
         print(f"serving {len(args.prompts)} prompts on {args.arch} "
               f"({'full' if args.full_config else 'smoke'} config, "
@@ -88,6 +100,15 @@ def main():
         print(f"slo: ttft p50 {slo['ttft_p50_ms']:.1f} ms / "
               f"p99 {slo['ttft_p99_ms']:.1f} ms, itl p50 "
               f"{slo['itl_p50_ms']:.2f} ms / p99 {slo['itl_p99_ms']:.2f} ms")
+        c = eng.counters()
+        if "pfx_entries" in c:
+            print(f"prefix cache: hit rate {c['prefix_hit_rate']:.2f} "
+                  f"({c['prefix_hits']:.0f}/"
+                  f"{c['prefix_hits'] + c['prefix_misses']:.0f}), "
+                  f"{c['prefill_tokens_saved']:.0f} prefill tokens saved, "
+                  f"{c['pfx_entries']:.0f} entries resident")
+        else:
+            print("prefix cache: off")
         eng.close()
         return
 

@@ -370,15 +370,18 @@ def paged_view(pool: jax.Array, tables: jax.Array, block_size: int) -> jax.Array
 
 def paged_write_rows(
     pool: jax.Array,        # (Hkv, P, Dh)
-    rows: jax.Array,        # (Hkv, S, Dh) values for logical positions 0..S-1
+    rows: jax.Array,        # (Hkv, S, Dh) values for logical positions start..start+S-1
     table_row: jax.Array,   # (M,) int32 block table of the target slot
     block_size: int,
+    start: int = 0,
 ) -> jax.Array:
     """Scatter S contiguous logical positions of one slot into the pool
-    (prefill → paged cache hand-off).  Positions past the slot's allocated
-    blocks resolve to the trash block."""
+    (prefill → paged cache hand-off).  ``start`` offsets the logical
+    positions — suffix prefill writes rows start..start+S-1 after adopted
+    prefix blocks, leaving those untouched.  Positions past the slot's
+    allocated blocks resolve to the trash block."""
     s = rows.shape[1]
-    t = jnp.arange(s)
+    t = start + jnp.arange(s)
     flat = table_row[t // block_size] * block_size + t % block_size
     return pool.at[:, flat, :].set(rows.astype(pool.dtype))
 

@@ -22,7 +22,10 @@ elsewhere; the continuous engine refuses politely):
   paged_cache_init(n_blocks, block_size)           → (cache, cache_specs)
   decode_step_paged(params, token, pos, tables, cache, block_size)
                                                    → (logits, cache)
-  paged_prefill_write(cache, prefill_cache, table_row, block_size) → cache
+  paged_prefill_write(cache, prefill_cache, table_row, block_size, start=0)
+                                                   → cache
+  prefill_suffix(params, tokens, start, table_row, cache, block_size,
+                 lengths)                          → (logits, cache)
 """
 
 from __future__ import annotations
@@ -54,6 +57,7 @@ class ModelApi:
     paged_cache_init: Optional[Callable] = None
     decode_step_paged: Optional[Callable] = None
     paged_prefill_write: Optional[Callable] = None
+    prefill_suffix: Optional[Callable] = None
 
     @property
     def supports_paged(self) -> bool:
@@ -132,8 +136,14 @@ def _transformer_api(cfg: ModelConfig) -> ModelApi:
             if paged else None
         ),
         paged_prefill_write=(
-            (lambda c, pc, row, bs:
-             transformer.lm_paged_prefill_write(cfg, c, pc, row, bs))
+            (lambda c, pc, row, bs, start=0:
+             transformer.lm_paged_prefill_write(cfg, c, pc, row, bs, start=start))
+            if paged else None
+        ),
+        prefill_suffix=(
+            (lambda p, t, start, row, c, bs, lengths=None:
+             transformer.lm_prefill_suffix(
+                 p, cfg, t, start, row, c, bs, lengths=lengths))
             if paged else None
         ),
     )

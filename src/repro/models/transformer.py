@@ -55,6 +55,7 @@ __all__ = [
     "lm_paged_cache_init",
     "lm_decode_step_paged",
     "lm_paged_prefill_write",
+    "lm_prefill_suffix",
     "layer_windows",
 ]
 
@@ -463,20 +464,117 @@ def lm_paged_prefill_write(
     prefill_cache: PyTree,   # lm_cache_init layout, batch dim of 1
     table_row: jax.Array,    # (M,) int32 block table of the admitted slot
     block_size: int,
+    start: int = 0,
 ) -> PyTree:
     """Scatter one prefilled sequence's dense KV rows into the pool.
 
     ``prefill_cache`` is what ``lm_prefill(..., max_len=bucket)`` built for
     a batch of one; its ``bucket`` rows land at the slot's block-table
-    positions (rows past the allocated blocks resolve to the trash block,
-    and pad rows inside them are masked until decode overwrites).
+    positions from logical position ``start`` on (rows past the allocated
+    blocks resolve to the trash block, and pad rows inside them are masked
+    until decode overwrites).  A non-zero ``start`` leaves the adopted
+    prefix blocks untouched (prefix-cache suffix hand-off).
     """
     _require_no_windows(cfg)
 
     def write(pool, dense):
         # pool (n_steps, Hkv, P, Dh); dense (n_steps, 1, Hkv, S, Dh)
         return jax.vmap(
-            lambda pl, dn: paged_write_rows(pl, dn, table_row, block_size)
+            lambda pl, dn: paged_write_rows(
+                pl, dn, table_row, block_size, start=start
+            )
         )(pool, dense[:, 0])
 
     return jax.tree_util.tree_map(write, cache, prefill_cache)
+
+
+def lm_prefill_suffix(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,       # (1, S_suf) suffix tokens, padded to a block multiple
+    start: int,              # static: adopted prefix length, multiple of block_size
+    table_row: jax.Array,    # (M,) int32 block table of the admitted slot
+    cache: PyTree,           # lm_paged_cache_init layout
+    block_size: int,
+    lengths: Optional[jax.Array] = None,  # (1,) true suffix length
+) -> Tuple[jax.Array, PyTree]:
+    """Prefill only a prompt's suffix against adopted prefix blocks.
+
+    The slot's first ``start`` logical positions already hold the prefix
+    KV (adopted, refcounted, from a :class:`repro.serve.kvcache.PrefixIndex`
+    hit); this pass embeds just the suffix at positions
+    ``start..start+S-1``, writes its K/V into the pool per layer, and runs
+    flash attention with the gathered ``start + S`` keys — so suffix
+    queries attend to the adopted blocks exactly as full prefill's rows
+    ``start..`` attend to its recomputed prefix.
+
+    Bitwise parity with :func:`lm_prefill` holds because the key-axis
+    length matches (full bucket ``blocks_for(L)*bs == start + S`` when
+    ``start ≡ 0 (mod bs)``), the same flash kernel sees the same per-row
+    causal masks, masked positions contribute exact zeros, and the pool
+    round-trip is dtype-identity (KV is computed in the cache dtype).
+    Asserted by tests, and the basis of the engine's prefix-on vs
+    prefix-off byte parity.
+    """
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.models.common import paged_view
+
+    _require_no_windows(cfg)
+    s = tokens.shape[1]
+    if start % block_size != 0:
+        raise ValueError(f"start {start} not a multiple of block_size {block_size}")
+    if (start + s) % block_size != 0:
+        raise ValueError(
+            f"suffix length {s} must pad start {start} to a block multiple"
+        )
+    n_view = (start + s) // block_size
+    cdt = compute_dtype(cfg)
+    x = embed_apply(params["embed"], cfg, tokens)
+    positions = start + jnp.arange(s)[None, :]
+    _, per = _n_scan(cfg)
+
+    def sub_suffix(p, x, kv):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(p["attn"], cfg, h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kc = jnp.swapaxes(k, 1, 2)                   # (1, Hkv, S, Dh)
+        vc = jnp.swapaxes(v, 1, 2)
+        k_pool = paged_write_rows(kv["k"], kc[0], table_row, block_size, start=start)
+        v_pool = paged_write_rows(kv["v"], vc[0], table_row, block_size, start=start)
+        view_tbl = table_row[None, :n_view]          # (1, n_view)
+        k_view = paged_view(k_pool, view_tbl, block_size)  # (1, Hkv, start+S, Dh)
+        v_view = paged_view(v_pool, view_tbl, block_size)
+        # flash convention: queries are the LAST Sq positions of the key
+        # sequence — with Skv = start + S that is exactly start..start+S-1
+        attn = flash_attention(
+            jnp.swapaxes(q, 1, 2), k_view, v_view, causal=True
+        )
+        attn = jnp.swapaxes(attn, 1, 2).reshape(x.shape[0], s, -1)
+        x = x + attn @ p["attn"]["wo"].astype(cdt)
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            y, _ = moe_mod.moe_apply(p["moe"], cfg, h2)
+        else:
+            y = mlp_apply(p["mlp"], cfg, h2)
+        return x + y, {"k": k_pool, "v": v_pool}
+
+    def body(x, xs):
+        blk, kvs = xs
+        new_kvs = {}
+        if per == 1:
+            x, kv = sub_suffix(blk, x, kvs["pos0"])
+            new_kvs["pos0"] = kv
+        else:
+            for i in range(per):
+                sub = jax.tree_util.tree_map(lambda v: v[i], blk)
+                x, kv = sub_suffix(sub, x, kvs[f"pos{i}"])
+                new_kvs[f"pos{i}"] = kv
+        return x, new_kvs
+
+    x, new_cache = lax.scan(
+        body, x, (params["blocks"], cache), unroll=flags.scan_unroll()
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = last_token_logits(params["embed"], cfg, x, lengths=lengths)
+    return logits, new_cache

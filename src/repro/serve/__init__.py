@@ -12,16 +12,20 @@ TTFT/inter-token SLO accounting)  → :mod:`repro.serve.scheduler`
 """
 
 from .engine import Engine, GenerationResult, ServeConfig
-from .kvcache import TRASH_BLOCK, BlockManager, PagedCacheSpec, blocks_for
-from .scheduler import ContinuousEngine, ContinuousStats
+from .kvcache import (
+    TRASH_BLOCK, BlockManager, PagedCacheSpec, PrefixIndex, blocks_for,
+)
+from .scheduler import ContinuousEngine, ContinuousStats, EngineClosed
 
 __all__ = [
     "BlockManager",
     "ContinuousEngine",
     "ContinuousStats",
     "Engine",
+    "EngineClosed",
     "GenerationResult",
     "PagedCacheSpec",
+    "PrefixIndex",
     "ServeConfig",
     "TRASH_BLOCK",
     "blocks_for",

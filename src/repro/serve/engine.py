@@ -41,6 +41,7 @@ class ServeConfig:
     max_len: int = 512
     greedy: bool = True
     temperature: float = 1.0
+    top_k: int = 0            # 0 = no top-k truncation (sampling engines)
     seed: int = 0
     # Host-sync cadence of the decode loop: emitted tokens accumulate in a
     # device-side buffer and the all-done flag is polled only every

@@ -25,6 +25,18 @@ drain.  This module decouples sequence lifetime from batch lifetime:
   lone caller therefore pays zero coordination latency, and leadership
   hands off through the lock-release/re-check dance rather than a
   parked-thread wakeup.
+* **Prefix-cache sharing.**  Admission probes a
+  :class:`~repro.serve.kvcache.PrefixIndex` keyed by rolling hashes of
+  full token blocks: on a hit the slot *adopts* the resident blocks
+  (refcount bump, zero prefill compute for those tokens) and prefills
+  only the suffix through the chunked
+  :func:`~repro.models.transformer.lm_prefill_suffix` path — logits are
+  bit-identical to full prefill, so greedy outputs are byte-identical
+  with sharing on or off.  Every admitted prompt publishes its full
+  blocks back to the index; under pool pressure the index LRU-evicts
+  entries whose blocks nothing else holds.  Sharing is bypassed where
+  bitwise prefill reproducibility doesn't hold (MoE capacity routing is
+  batch-shape-dependent) or positions are offset (VLM image tokens).
 
 Emission is byte-compatible with the static engine's greedy path: the
 first token is the argmax of the prefill logits at the true last prompt
@@ -55,9 +67,15 @@ from repro.configs.base import ModelConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.registry import build_model
 from repro.serve.engine import GenerationResult, ServeConfig
-from repro.serve.kvcache import BlockManager, PagedCacheSpec, blocks_for
+from repro.serve.kvcache import (
+    BlockManager, PagedCacheSpec, PrefixIndex, blocks_for,
+)
 
-__all__ = ["ContinuousEngine", "ContinuousStats"]
+__all__ = ["ContinuousEngine", "ContinuousStats", "EngineClosed"]
+
+
+class EngineClosed(RuntimeError):
+    """The engine is closed; the request was or will never be admitted."""
 
 # Bounded windows for TTFT / inter-token latency percentiles.
 _SLO_WINDOW = 8192
@@ -77,11 +95,19 @@ class ContinuousStats:
     decode_tokens: int = 0      # tokens emitted by decode steps (excl. first)
     admission_stalls: int = 0   # head-of-queue blocked on slots or blocks
     peak_active: int = 0
+    prefix_hits: int = 0        # admissions that adopted indexed blocks
+    prefix_misses: int = 0      # prefix-eligible admissions with no match
+    prefill_tokens_saved: int = 0  # prompt tokens whose prefill was skipped
 
     @property
     def tokens_per_step(self) -> float:
         """Mean kept tokens per decode step (≤ max_slots; lane occupancy)."""
         return self.decode_tokens / self.steps if self.steps else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        probes = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / probes if probes else 0.0
 
 
 class _Seq:
@@ -105,11 +131,12 @@ class _Seq:
 
 
 class _Request:
-    __slots__ = ("prompt", "budget", "future", "t_submit")
+    __slots__ = ("prompt", "budget", "future", "t_submit", "seed")
 
-    def __init__(self, prompt: List[int], budget: int):
+    def __init__(self, prompt: List[int], budget: int, seed: int = 0):
         self.prompt = prompt
         self.budget = budget
+        self.seed = seed
         self.future: "Future[GenerationResult]" = Future()
         self.t_submit = time.perf_counter()
 
@@ -117,12 +144,14 @@ class _Request:
 class ContinuousEngine:
     """``submit(text) -> Future`` serving over a paged pool of decode slots.
 
-    Greedy-only (continuous batching re-orders lanes between steps, so a
-    shared sampling key would make outputs depend on co-residents; greedy
-    keeps every sequence's tokens a pure function of its own prompt —
-    which is also what the byte-parity tests against the static engine
-    pin).  ``generate(texts)`` is a thin batch wrapper: enqueue all, lead
-    once, gather in order.
+    Greedy by default; with ``greedy=False`` each request samples
+    (temperature + top-k) under its own PRNG key derived from a
+    per-request seed folded with the token index — never a shared or
+    lane-positional key — so sampled outputs are a pure function of
+    (prompt, seed), independent of lane composition and eviction order.
+    The byte-parity tests against the static engine keep running greedy.
+    ``generate(texts)`` is a thin batch wrapper: enqueue all, lead once,
+    gather in order.
     """
 
     def __init__(
@@ -131,13 +160,8 @@ class ContinuousEngine:
         params,
         spec: PagedCacheSpec,
         scfg: ServeConfig = ServeConfig(),
+        prefix_cache: bool = True,
     ):
-        if not scfg.greedy:
-            raise NotImplementedError(
-                "continuous batching is greedy-only (lane composition "
-                "changes between steps; a shared sampling key would make "
-                "outputs depend on co-scheduled requests)"
-            )
         self.cfg = cfg
         self.api = build_model(cfg)
         if not self.api.supports_paged:
@@ -156,17 +180,57 @@ class ContinuousEngine:
         self._mgr = BlockManager(spec)
         self._cache, _ = self.api.paged_cache_init(spec.n_blocks, spec.block_size)
 
+        # Prefix sharing needs bitwise-reproducible prefill: MoE capacity
+        # routing depends on the prefill batch shape (suffix vs full give
+        # different drops), and VLM image tokens offset every position —
+        # bypass both so sharing can never change bytes.
+        self._prefix_enabled = bool(
+            prefix_cache
+            and self.api.prefill_suffix is not None
+            and self._offset == 0
+            and cfg.family != "moe"
+        )
+        self._index: Optional[PrefixIndex] = (
+            PrefixIndex(self._mgr) if self._prefix_enabled else None
+        )
+
         # Fixed-shape batched decode: admission/eviction only edit the
         # block tables and the (S,) token/pos vectors, so this traces once.
         bs = spec.block_size
+        temp = float(max(scfg.temperature, 1e-6))
+        top_k = int(getattr(scfg, "top_k", 0))
 
-        def step(p, cur, pos, tables, cache):
-            logits, cache = self.api.decode_step_paged(
-                p, cur, pos, tables, cache, bs
-            )
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        def sample_rows(logits, seeds, idx):
+            # one key per lane from (request seed, token index) ONLY —
+            # re-running the same request in any lane mix reproduces it
+            lg = logits.astype(jnp.float32) / temp
+            if top_k > 0:
+                kth = jax.lax.top_k(lg, min(top_k, lg.shape[-1]))[0][..., -1:]
+                lg = jnp.where(lg < kth, -jnp.inf, lg)
+            keys = jax.vmap(
+                lambda s, i: jax.random.fold_in(jax.random.PRNGKey(s), i)
+            )(seeds, idx)
+            return jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+
+        if scfg.greedy:
+            def step(p, cur, pos, tables, cache):
+                logits, cache = self.api.decode_step_paged(
+                    p, cur, pos, tables, cache, bs
+                )
+                return jnp.argmax(logits, -1).astype(jnp.int32), cache
+        else:
+            def step(p, cur, pos, tables, cache, seeds, idx):
+                logits, cache = self.api.decode_step_paged(
+                    p, cur, pos, tables, cache, bs
+                )
+                return sample_rows(logits, seeds, idx), cache
 
         self._step = jax.jit(step, donate_argnums=(4,))
+        self._sample_first = jax.jit(
+            lambda lg, seed: sample_rows(
+                lg[None], seed[None], jnp.zeros((1,), jnp.int32)
+            )[0]
+        )
         self._prefill = jax.jit(
             lambda p, b: self.api.prefill(p, b, max_len=spec.max_len)
         )
@@ -174,10 +238,22 @@ class ContinuousEngine:
             lambda c, pc, row: self.api.paged_prefill_write(c, pc, row, bs),
             donate_argnums=(0,),
         )
+        # suffix prefill retraces per (suffix bucket, start) pair — both
+        # multiples of block_size and bounded by the table width M, so the
+        # trace count is bounded by M² for the engine's lifetime
+        self._prefill_suffix = jax.jit(
+            lambda p, t, start, row, c, lengths: self.api.prefill_suffix(
+                p, t, start, row, c, bs, lengths=lengths
+            ),
+            static_argnums=(2,),
+            donate_argnums=(4,),
+        )
 
         # Leader-only decode state (no lock: exactly one leader at a time).
         self._cur = np.zeros((spec.max_slots, 1), np.int32)
         self._pos = np.zeros((spec.max_slots,), np.int32)
+        self._seeds = np.zeros((spec.max_slots,), np.uint32)
+        self._idx = np.zeros((spec.max_slots,), np.int32)
         self._active: Dict[int, _Seq] = {}
         self._free_slots: List[int] = list(range(spec.max_slots - 1, -1, -1))
         self._tables_dev = jnp.asarray(self._mgr.tables)
@@ -193,7 +269,11 @@ class ContinuousEngine:
     # -- client surface ------------------------------------------------------
 
     def submit(
-        self, text: str, max_new_tokens: Optional[int] = None, lead: bool = True
+        self,
+        text: str,
+        max_new_tokens: Optional[int] = None,
+        lead: bool = True,
+        seed: Optional[int] = None,
     ) -> "Future[GenerationResult]":
         """Enqueue one prompt; the future resolves to a GenerationResult.
 
@@ -201,6 +281,11 @@ class ContinuousEngine:
         the decode loop for every queued and active request until no
         work remains (``lead=False`` only enqueues — ``generate`` uses
         it to stage a batch before leading once).
+
+        ``seed`` keys this request's sampling stream (``greedy=False``);
+        when omitted it derives from ``scfg.seed`` and the submission
+        ordinal — pass it explicitly when replaying a workload across
+        threads, where submission order isn't deterministic.
         """
         budget = max_new_tokens or self.scfg.max_new_tokens
         req = _Request(self.tok.encode(text, add_eos=False), budget)
@@ -220,9 +305,12 @@ class ContinuousEngine:
             return req.future
         with self._lock:
             if self._stop:
-                raise RuntimeError("engine is closed")
-            self._queue.append(req)
+                raise EngineClosed("engine is closed")
             self.stats.requests += 1
+            req.seed = seed if seed is not None else (
+                self.scfg.seed + self.stats.requests
+            )
+            self._queue.append(req)
         if lead:
             self._maybe_lead()
         return req.future
@@ -282,29 +370,55 @@ class ContinuousEngine:
             if isinstance(e, (SystemExit, KeyboardInterrupt)):
                 raise
 
+    def _probe(self, prompt: List[int]):
+        """Longest indexed block-aligned prefix → (blocks, n_tokens)."""
+        if self._index is None:
+            return [], 0
+        return self._index.match(prompt)
+
     def _admit(self) -> None:
         """Move queued requests into free slots, strictly FIFO.
 
         Head-of-line blocking is deliberate: skipping a big request to
         admit later small ones would starve it under sustained load, and
-        FIFO keeps the backpressure tests deterministic.
+        FIFO keeps the backpressure tests deterministic.  Under pool
+        pressure the prefix index gives blocks back (LRU entries whose
+        blocks nothing else holds) before the head request stalls or
+        fails — index residency is a cache, never a reservation.
         """
         while self._free_slots:
             with self._lock:
                 if self._stop or not self._queue:
                     return
                 req = self._queue[0]
-                total = self._offset + len(req.prompt) + req.budget - 1
-                if not self._mgr.can_admit(total):
+            total = self._offset + len(req.prompt) + req.budget - 1
+            # leader-only state below (index, allocator): the lock above
+            # only guards the queue — nobody else pops it
+            adopt, start = self._probe(req.prompt)
+            if not self._mgr.can_admit(total, n_adopted=len(adopt)):
+                if self._index is not None:
+                    shortfall = (
+                        blocks_for(total, self.spec.block_size)
+                        - len(adopt) - self._mgr.n_free
+                    )
+                    if shortfall > 0 and self._index.evict_for(shortfall):
+                        # eviction may have dropped the matched entry (or
+                        # unlocked a shorter one): probe again
+                        adopt, start = self._probe(req.prompt)
+                if not self._mgr.can_admit(total, n_adopted=len(adopt)):
                     if self._active:
                         # an eviction will free blocks: wait at the head
                         self.stats.admission_stalls += 1
                         return
-                    # leader is the sole allocator, so an idle pool is a
+                    # leader is the sole allocator and the index has been
+                    # drained of reclaimable blocks, so an idle pool is a
                     # FULL pool — this request can never fit; stalling
                     # here would spin the loop forever
-                    self._queue.popleft()
-                    self.stats.failed += 1
+                    with self._lock:
+                        if self._stop:
+                            return  # close() already failed the queue
+                        self._queue.popleft()
+                        self.stats.failed += 1
                     req.future.set_exception(
                         RuntimeError(
                             f"request needs {blocks_for(total, self.spec.block_size)} "
@@ -313,15 +427,20 @@ class ContinuousEngine:
                         )
                     )
                     continue
+            with self._lock:
+                if self._stop:
+                    return
                 self._queue.popleft()
             if not req.future.set_running_or_notify_cancel():
                 with self._lock:
                     self.stats.cancelled += 1
                 continue
-            self._admit_one(req, total)
+            self._admit_one(req, total, adopt, start)
         # no free slot for the head request: wait for an eviction
 
-    def _admit_one(self, req: _Request, total: int) -> None:
+    def _admit_one(
+        self, req: _Request, total: int, adopt: List[int], start: int
+    ) -> None:
         prompt, budget = req.prompt, req.budget
         L = len(prompt)
         # Pad prompts up to a block-size multiple so distinct lengths
@@ -334,19 +453,41 @@ class ContinuousEngine:
             self.spec.max_len - self._offset,
             blocks_for(L, self.spec.block_size) * self.spec.block_size,
         )
-        toks = np.full((1, bucket), self.tok.pad_id, np.int32)
-        toks[0, :L] = prompt
-        batch: Dict[str, Any] = {
-            "tokens": jnp.asarray(toks),
-            "lengths": jnp.asarray([L], jnp.int32),
-        }
-        if self.cfg.family == "vlm":
-            batch["patch_embeds"] = jnp.zeros(
-                (1, self.cfg.n_img_tokens, self.cfg.d_model), jnp.float32
-            )
         t0 = time.perf_counter()
-        logits, dense = self._prefill(self.params, batch)
-        first = int(jnp.argmax(logits[0]))
+        slot: Optional[int] = None
+        if start > 0:
+            # Prefix hit: the slot and its blocks come first (suffix
+            # prefill writes through the block table), then only the
+            # unmatched tail runs the model — ``start`` prompt tokens
+            # cost zero prefill FLOPs.
+            slot = self._free_slots.pop()
+            admitted = self._mgr.admit(slot, total, prefix_blocks=adopt)
+            assert admitted, "can_admit passed but admit failed (leader is sole allocator)"
+            suf = np.full((1, bucket - start), self.tok.pad_id, np.int32)
+            suf[0, : L - start] = prompt[start:]
+            row = jnp.asarray(self._mgr.tables[slot])
+            logits, self._cache = self._prefill_suffix(
+                self.params, jnp.asarray(suf), start, row, self._cache,
+                jnp.asarray([L - start], jnp.int32),
+            )
+            dense = None
+            self.stats.prefix_hits += 1
+            self.stats.prefill_tokens_saved += start
+        else:
+            if self._prefix_enabled:
+                self.stats.prefix_misses += 1
+            toks = np.full((1, bucket), self.tok.pad_id, np.int32)
+            toks[0, :L] = prompt
+            batch: Dict[str, Any] = {
+                "tokens": jnp.asarray(toks),
+                "lengths": jnp.asarray([L], jnp.int32),
+            }
+            if self.cfg.family == "vlm":
+                batch["patch_embeds"] = jnp.zeros(
+                    (1, self.cfg.n_img_tokens, self.cfg.d_model), jnp.float32
+                )
+            logits, dense = self._prefill(self.params, batch)
+        first = self._first_token(logits, req.seed)
         now = time.perf_counter()
         prefill_s = now - t0
         self.stats.prefills += 1
@@ -355,38 +496,70 @@ class ContinuousEngine:
         self.stats.tokens_out += 1
 
         if first == self.tok.eos_id or budget == 1:
-            # Entirely served by prefill: never occupies a slot or blocks.
+            # Entirely served by prefill: occupies no slot past this
+            # point.  A prefix hit already owns blocks — publish the
+            # prompt's full blocks (the suffix KV is resident and exact)
+            # before dropping the slot's hold, then let go.
+            if slot is not None:
+                if self._index is not None:
+                    self._index.publish(
+                        prompt, self._mgr.slot_blocks(slot), L
+                    )
+                self._mgr.release(slot)
+                self._free_slots.append(slot)
+                self._tables_dirty = True
             self.stats.completed += 1
             req.future.set_result(
                 self._result([first], L, 0, prefill_s, 0.0)
             )
             return
 
-        slot = self._free_slots.pop()
-        admitted = self._mgr.admit(slot, total)
-        assert admitted, "can_admit passed but admit failed (leader is sole allocator)"
-        row = jnp.asarray(self._mgr.tables[slot])
-        self._cache = self._write(self._cache, dense, row)
+        if slot is None:
+            slot = self._free_slots.pop()
+            admitted = self._mgr.admit(slot, total)
+            assert admitted, "can_admit passed but admit failed (leader is sole allocator)"
+            row = jnp.asarray(self._mgr.tables[slot])
+            self._cache = self._write(self._cache, dense, row)
+        if self._index is not None:
+            # publish every full-block prefix: decode writes land in the
+            # partial/fresh tail blocks, never in published ones
+            self._index.publish(prompt, self._mgr.slot_blocks(slot), L)
         seq = _Seq(req.future, L, budget, req.t_submit, prefill_s, now)
         seq.tokens.append(first)
         self._cur[slot, 0] = first
         self._pos[slot] = self._offset + L
+        self._seeds[slot] = req.seed & 0xFFFFFFFF
+        self._idx[slot] = 1
         self._active[slot] = seq
         self._tables_dirty = True
         self.stats.peak_active = max(self.stats.peak_active, len(self._active))
+
+    def _first_token(self, logits, seed: int) -> int:
+        """First emitted token from the prefill logits (greedy or sampled
+        with this request's key at token index 0)."""
+        if self.scfg.greedy:
+            return int(jnp.argmax(logits[0]))
+        return int(
+            self._sample_first(
+                logits[0], jnp.asarray(seed & 0xFFFFFFFF, jnp.uint32)
+            )
+        )
 
     def _decode_once(self) -> None:
         """One batched paged decode step + host-side emit/evict."""
         if self._tables_dirty:
             self._tables_dev = jnp.asarray(self._mgr.tables)
             self._tables_dirty = False
-        nxt, self._cache = self._step(
+        args = (
             self.params,
             jnp.asarray(self._cur),
             jnp.asarray(self._pos),
             self._tables_dev,
             self._cache,
         )
+        if not self.scfg.greedy:
+            args = args + (jnp.asarray(self._seeds), jnp.asarray(self._idx))
+        nxt, self._cache = self._step(*args)
         nxt = np.asarray(nxt)  # the one host sync per step: (S,) int32
         now = time.perf_counter()
         self.stats.steps += 1
@@ -404,6 +577,7 @@ class ContinuousEngine:
             else:
                 self._cur[slot, 0] = tok
                 self._pos[slot] += 1
+                self._idx[slot] = len(seq.tokens)
 
     def _evict(self, slot: int, seq: _Seq, now: float) -> None:
         self._mgr.release(slot)
@@ -460,25 +634,57 @@ class ContinuousEngine:
         """Flat cumulative counters (loadgen ``counters_fn`` shape)."""
         out = {k: float(v) for k, v in dataclasses.asdict(self.stats).items()}
         out["tokens_per_step"] = self.stats.tokens_per_step
+        out["prefix_hit_rate"] = self.stats.prefix_hit_rate
         out.update({f"blk_{k}": float(v) for k, v in self._mgr.stats().items()})
+        if self._index is not None:
+            out.update(
+                {f"pfx_{k}": float(v) for k, v in self._index.stats().items()}
+            )
         return out
+
+    def check(self) -> None:
+        """Assert allocator + prefix-index consistency (tests + debug):
+        every block's refcount must equal its slot holds plus its index
+        holds, exactly."""
+        self._mgr.check(
+            self._index.block_refs() if self._index is not None else None
+        )
 
     # -- shutdown ------------------------------------------------------------
 
-    def close(self) -> None:
-        """Stop admitting; cancel queued requests; wait out the leader.
+    def close(self, drain: bool = False) -> None:
+        """Stop admitting; fail queued requests; wait out the leader.
 
-        Active sequences finish their decode (bounded by the largest
-        remaining budget) — the leader keeps decoding but admits nothing
-        once the stop flag is up.
+        Queued-but-unadmitted futures resolve with :class:`EngineClosed`
+        — a caller blocked on ``.result()`` gets a clear error instead
+        of waiting forever.  Active sequences always finish their decode
+        (bounded by the largest remaining budget): the leader keeps
+        decoding but admits nothing once the stop flag is up.
+
+        ``drain=True`` first serves everything already queued (leading
+        if necessary), so no request submitted before ``close`` is lost.
         """
+        if drain:
+            while True:
+                with self._lock:
+                    if self._stop or not self._queue:
+                        break
+                self._maybe_lead()
+                with self._leader:
+                    pass  # an existing leader is draining; wait it out
         with self._lock:
             if self._stop:
                 return
             self._stop = True
             for req in self._queue:
-                if req.future.cancel():
-                    self.stats.cancelled += 1
+                if req.future.set_running_or_notify_cancel():
+                    req.future.set_exception(
+                        EngineClosed(
+                            "engine is closed; request was queued but "
+                            "never admitted"
+                        )
+                    )
+                self.stats.cancelled += 1
             self._queue.clear()
         with self._leader:
             pass  # leader drains its active set, then we own shutdown

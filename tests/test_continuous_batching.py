@@ -235,6 +235,14 @@ def test_ragged_budgets_match_serial(tiny, ref_engine):
     got = [f.result(timeout=300).token_ids for f in futs]
     for t, b, g in zip(ragged, budgets, got):
         assert g == ref_engine.generate([t])[0].token_ids[:b]
+    # after drain the only blocks still resident are the prefix index's
+    # published prompt blocks; clearing it must empty the pool exactly
+    cont.check()
+    st = cont._mgr.stats()
+    held = sum(1 for _ in cont._index.block_refs()) if cont._index else 0
+    assert st["in_use"] == held
+    if cont._index is not None:
+        cont._index.clear()
     st = cont._mgr.stats()
     assert st["in_use"] == 0 and st["allocs"] == st["frees"]
     cont._mgr.check()
@@ -315,13 +323,7 @@ def test_concurrent_submits_and_slo(tiny, ref_engine):
         cont.submit("ab")
 
 
-def test_greedy_only_and_unsupported_family(tiny):
-    cfg, params = tiny
-    with pytest.raises(NotImplementedError, match="greedy"):
-        ContinuousEngine(
-            cfg, params, _spec(),
-            ServeConfig(max_new_tokens=4, max_len=MAX_LEN, greedy=False),
-        )
+def test_unsupported_family_rejected(tiny):
     ssm_cfg = dataclasses.replace(
         get_config("mamba2-1.3b"),
         n_layers=2, d_model=64, vocab_size=300,

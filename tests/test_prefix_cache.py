@@ -1,0 +1,437 @@
+"""Prefix-sharing paged KV cache tests.
+
+The load-bearing claims:
+
+* refcounted allocator invariants: double-unref rejection, free-of-shared
+  rejection, COW ``fork`` giving a slot a private copy before a write,
+  ``check()`` catching a hand-corrupted refcount exactly (slot holds +
+  index holds == refcount);
+* :class:`PrefixIndex` behavior: longest-block match with exact-token
+  verification (a fabricated hash collision is a miss, never a wrong
+  adoption), LRU touch ordering, eviction never freeing a block another
+  holder still references;
+* the chunked suffix-prefill path produces logits bit-identical to full
+  prefill (the basis of prefix-on vs prefix-off byte parity);
+* the continuous engine end to end: hits counted, prefill tokens saved,
+  outputs byte-identical with sharing on vs off, pool pressure reclaims
+  index blocks instead of stalling forever;
+* ``close(drain=False)`` fails queued-but-unadmitted futures with
+  :class:`EngineClosed`; ``close(drain=True)`` loses nothing;
+* sampling in continuous mode: per-request keys make outputs independent
+  of lane composition; greedy stays the default.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.registry import build_model
+from repro.serve.engine import ServeConfig
+from repro.serve.kvcache import (
+    BlockManager,
+    PagedCacheSpec,
+    PrefixIndex,
+    rolling_block_hashes,
+)
+from repro.serve.scheduler import ContinuousEngine, EngineClosed
+
+
+def _tiny_cfg(**kw):
+    base = dataclasses.replace(
+        get_config("yi-6b"),
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=300,
+    )
+    return dataclasses.replace(base, **kw)
+
+
+MAX_LEN, BS = 64, 8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params, _ = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _spec(**kw):
+    base = dict(n_blocks=33, block_size=BS, max_slots=3,
+                max_blocks_per_seq=MAX_LEN // BS)
+    base.update(kw)
+    return PagedCacheSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# refcounted allocator
+# ---------------------------------------------------------------------------
+
+def test_ref_unref_lifecycle_and_double_unref():
+    mgr = BlockManager(_spec(n_blocks=9, max_slots=2, max_blocks_per_seq=4))
+    blocks = mgr.alloc(2)
+    assert all(mgr.refcount(b) == 1 for b in blocks)
+    mgr.ref(blocks)
+    assert all(mgr.refcount(b) == 2 for b in blocks)
+    assert mgr.unref(blocks) == 0          # still held once: nothing freed
+    assert mgr.unref(blocks) == 2          # last holder: back to free list
+    assert mgr.n_in_use == 0
+    with pytest.raises(ValueError, match="no holders"):
+        mgr.unref(blocks)
+    with pytest.raises(ValueError, match="trash"):
+        mgr.ref([0])
+    mgr.check({})
+
+
+def test_free_of_shared_block_rejected():
+    mgr = BlockManager(_spec(n_blocks=9, max_slots=2, max_blocks_per_seq=4))
+    blocks = mgr.alloc(1)
+    mgr.ref(blocks)
+    with pytest.raises(ValueError, match="shared"):
+        mgr.free(blocks)
+    mgr.unref(blocks)
+    mgr.free(blocks)                        # exclusive again: fine
+    assert mgr.n_in_use == 0
+
+
+def test_release_unrefs_instead_of_freeing():
+    mgr = BlockManager(_spec(n_blocks=9, max_slots=2, max_blocks_per_seq=4))
+    assert mgr.admit(0, 17)                # 3 blocks
+    shared = mgr.slot_blocks(0)[:2]
+    assert mgr.admit(1, 17, prefix_blocks=shared)
+    assert all(mgr.refcount(b) == 2 for b in shared)
+    mgr.release(0)
+    # slot 1 still addresses the shared blocks: they must stay resident
+    assert all(mgr.refcount(b) == 1 for b in shared)
+    assert set(shared) <= set(mgr.slot_blocks(1))
+    mgr.check({})
+    mgr.release(1)
+    assert mgr.n_in_use == 0
+
+
+def test_check_catches_corrupted_refcount():
+    mgr = BlockManager(_spec(n_blocks=9, max_slots=2, max_blocks_per_seq=4))
+    assert mgr.admit(0, 17)
+    b = mgr.slot_blocks(0)[0]
+    mgr.check({})
+    mgr._refcounts[b] = 5                  # corrupt: nothing holds 4 extra
+    with pytest.raises(AssertionError, match="refcount"):
+        mgr.check({})
+    mgr._refcounts[b] = 1
+    mgr.check({})
+    # refcount entry for a free block is out of sync too
+    free_b = mgr._free[-1]
+    mgr._refcounts[free_b] = 1
+    with pytest.raises(AssertionError, match="out of sync"):
+        mgr.check({})
+
+
+def test_fork_cow_gives_private_copy_on_write():
+    """Sharing slot writes must never be visible through the other table."""
+    spec = _spec(n_blocks=9, max_slots=2, max_blocks_per_seq=4)
+    mgr = BlockManager(spec)
+    # stand-in KV pool: one row-vector per pool row, addressed like the
+    # real per-layer pools (block i owns rows [i*bs, (i+1)*bs))
+    k = jnp.zeros((spec.n_blocks * BS, 4))
+
+    assert mgr.admit(0, 17)
+    shared = mgr.slot_blocks(0)
+    assert mgr.admit(1, 17, prefix_blocks=shared[:2])
+    b = shared[0]
+    marker = jnp.ones((BS, 4))
+    k = k.at[b * BS: (b + 1) * BS].set(marker)
+
+    # exclusive block: fork is a no-op
+    old, new = mgr.fork(1, 2)
+    assert old == new
+
+    # shared block: fork swaps in a fresh block; caller copies rows
+    old, new = mgr.fork(1, 0)
+    assert old == b and new != b
+    assert mgr.tables[1][0] == new and mgr.tables[0][0] == b
+    assert mgr.refcount(b) == 1 and mgr.refcount(new) == 1
+    k = k.at[new * BS: (new + 1) * BS].set(k[old * BS: (old + 1) * BS])
+    # slot 1 writes through its (now private) table entry
+    k = k.at[new * BS].set(7.0)
+    # slot 0's view of the original block is untouched
+    assert np.array_equal(
+        np.asarray(k[b * BS: (b + 1) * BS]), np.asarray(marker)
+    )
+    assert float(k[new * BS, 0]) == 7.0
+    mgr.check({})
+
+
+def test_fork_pool_exhausted_returns_none():
+    mgr = BlockManager(_spec(n_blocks=4, max_slots=2, max_blocks_per_seq=3))
+    assert mgr.admit(0, 17)                # all 3 usable blocks
+    assert mgr.admit(1, 17, prefix_blocks=mgr.slot_blocks(0))
+    assert mgr.fork(1, 0) is None          # nothing left to copy into
+    mgr.check({})
+
+
+# ---------------------------------------------------------------------------
+# prefix index
+# ---------------------------------------------------------------------------
+
+def _mgr_idx(**kw):
+    mgr = BlockManager(_spec(**kw))
+    return mgr, PrefixIndex(mgr)
+
+
+def test_index_publish_match_and_exact_verification():
+    mgr, idx = _mgr_idx()
+    prompt = list(range(1, 21))            # 20 tokens: 2 full blocks of 8
+    assert mgr.admit(0, 24)
+    blocks = mgr.slot_blocks(0)
+    assert idx.publish(prompt, blocks, len(prompt)) == 2
+    mgr.check(idx.block_refs())
+
+    got, n = idx.match(prompt)
+    assert n == 16 and got == blocks[:2]
+    # extending prompt with a different tail still matches the stem
+    got, n = idx.match(prompt[:16] + [99, 98, 97])
+    assert n == 16 and got == blocks[:2]
+    # shorter prompt matches fewer blocks (adoption leaves >= 1 token)
+    got, n = idx.match(prompt[:9])
+    assert n == 8 and got == blocks[:1]
+    # a full-block-aligned prompt never adopts ALL its blocks
+    got, n = idx.match(prompt[:16])
+    assert n == 8
+    # different tokens, same length: miss
+    got, n = idx.match([7] * 20)
+    assert n == 0 and got == []
+
+
+def test_index_hash_collision_is_a_miss():
+    mgr, idx = _mgr_idx()
+    prompt = list(range(1, 17))
+    assert mgr.admit(0, 24)
+    idx.publish(prompt, mgr.slot_blocks(0), len(prompt))
+    # fabricate a collision: same rolling hash key, different stored tokens
+    key = rolling_block_hashes(prompt, BS, 1)[0]
+    tokens, chain = idx._entries[key]
+    idx._entries[key] = ((999,) * len(tokens), chain)
+    got, n = idx.match(prompt[:9])
+    assert n == 0 and got == []
+    assert idx.hash_collisions >= 1
+
+
+def test_index_eviction_lru_and_never_frees_shared():
+    mgr, idx = _mgr_idx(n_blocks=17, max_slots=3)
+    pa = [1] * 9                            # 1 full block
+    pb = [2] * 9
+    assert mgr.admit(0, 9)
+    idx.publish(pa, mgr.slot_blocks(0), 9)
+    assert mgr.admit(1, 9)
+    idx.publish(pb, mgr.slot_blocks(1), 9)
+    a_blk = mgr.slot_blocks(0)[0]
+    b_blk = mgr.slot_blocks(1)[0]
+    # slot 0 finishes; slot 1 stays active.  a_blk is index-only (rc 1),
+    # b_blk is index+slot (rc 2).
+    mgr.release(0)
+    assert mgr.refcount(a_blk) == 1 and mgr.refcount(b_blk) == 2
+    # touch pa making pb's entry the LRU — but pb's block is shared, so
+    # eviction must skip it and take pa's entry instead
+    idx.match(pa + [3])
+    freed = idx.evict_for(1)
+    assert freed == 1
+    assert mgr.refcount(b_blk) == 2        # untouched: slot 1 still holds it
+    assert a_blk in mgr._free
+    mgr.check(idx.block_refs())
+    # nothing else is reclaimable while slot 1 lives
+    assert idx.evict_for(1) == 0
+    mgr.release(1)
+    assert idx.evict_for(1) == 1           # now pb's entry can go
+    assert mgr.n_in_use == 0
+
+
+def test_index_lru_order_evicts_oldest_first():
+    mgr, idx = _mgr_idx(n_blocks=17, max_slots=3)
+    pa, pb = [1] * 9, [2] * 9
+    assert mgr.admit(0, 9)
+    idx.publish(pa, mgr.slot_blocks(0), 9)
+    a_blk = mgr.slot_blocks(0)[0]
+    mgr.release(0)
+    assert mgr.admit(1, 9)
+    idx.publish(pb, mgr.slot_blocks(1), 9)
+    b_blk = mgr.slot_blocks(1)[0]
+    mgr.release(1)
+    # pa older than pb: one eviction takes pa's block
+    assert idx.evict_for(1) == 1
+    assert a_blk in mgr._free and mgr.refcount(b_blk) == 1
+
+
+# ---------------------------------------------------------------------------
+# chunked suffix prefill (model level)
+# ---------------------------------------------------------------------------
+
+def test_suffix_prefill_logits_bitwise_vs_full(tiny):
+    cfg, params = tiny
+    api = build_model(cfg)
+    spec = _spec()
+    cache, _ = api.paged_cache_init(spec.n_blocks, BS)
+
+    prompt = [256] + list(b"InChI=1S/C8H9NO2/c1-6(")  # 24 tokens: 3 blocks
+    L = len(prompt)
+    bucket = ((L + BS - 1) // BS) * BS
+    toks = np.full((1, bucket), 258, np.int32)
+    toks[0, :L] = prompt
+    full_logits, dense = api.prefill(
+        params, {"tokens": jnp.asarray(toks), "lengths": jnp.asarray([L])},
+        max_len=MAX_LEN,
+    )
+    # publisher wrote blocks [1, 2, 3]
+    row_pub = np.zeros(MAX_LEN // BS, np.int32)
+    row_pub[:3] = [1, 2, 3]
+    cache = api.paged_prefill_write(cache, dense, jnp.asarray(row_pub), BS)
+
+    for start in (8, 16):                   # adopt 1 then 2 blocks
+        n_adopt = start // BS
+        row = np.zeros(MAX_LEN // BS, np.int32)
+        row[:3] = row_pub[:3]
+        row[n_adopt:3] = [4, 5][: 3 - n_adopt]  # fresh suffix blocks
+        suf = toks[:, start:]
+        suf_logits, cache = api.prefill_suffix(
+            params, jnp.asarray(suf), start, jnp.asarray(row), cache, BS,
+            lengths=jnp.asarray([L - start]),
+        )
+        assert np.array_equal(np.asarray(full_logits), np.asarray(suf_logits)), (
+            f"suffix prefill logits differ from full prefill at start={start}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# continuous engine end to end
+# ---------------------------------------------------------------------------
+
+STEM = "InChI=1S/C8H9NO2/c1-6(10)9-7-2-4-8(11)5-3-7;"
+SHARED = [STEM + tail for tail in ("a1", "b22", "c333", "a1")]
+
+
+def test_engine_prefix_hits_and_byte_parity(tiny):
+    cfg, params = tiny
+    spec = _spec(n_blocks=65, max_slots=3, max_blocks_per_seq=8)
+    scfg = ServeConfig(max_new_tokens=8, max_len=MAX_LEN)
+    on = ContinuousEngine(cfg, params, spec, scfg, prefix_cache=True)
+    off = ContinuousEngine(cfg, params, spec, scfg, prefix_cache=False)
+    try:
+        want = [r.token_ids for r in off.generate(SHARED)]
+        got = [r.token_ids for r in on.generate(SHARED)]
+        assert got == want, "prefix sharing changed emitted bytes"
+        assert on.stats.prefix_hits >= len(SHARED) - 1
+        assert on.stats.prefill_tokens_saved >= 32 * (len(SHARED) - 1)
+        c = on.counters()
+        assert c["prefix_hit_rate"] > 0 and c["pfx_entries"] > 0
+        assert off.stats.prefix_hits == 0 and off.counters()["prefix_hit_rate"] == 0
+        on.check()
+        off.check()
+    finally:
+        on.close()
+        off.close()
+
+
+def test_engine_pool_pressure_reclaims_index_blocks(tiny):
+    cfg, params = tiny
+    # pool sized so resident index entries MUST be evicted to admit the
+    # later distinct prompts: 10 usable blocks, each request reserves 4,
+    # and every distinct prompt keeps 3 resident after finishing
+    spec = _spec(n_blocks=11, max_slots=2, max_blocks_per_seq=5)
+    scfg = ServeConfig(max_new_tokens=6, max_len=40)
+    on = ContinuousEngine(cfg, params, spec, scfg, prefix_cache=True)
+    off = ContinuousEngine(cfg, params, spec, scfg, prefix_cache=False)
+    try:
+        prompts = [
+            "InChI=1S/C4H10/c1-3-4-2;x",
+            "C1=CC=CC=C1O.C1=CC=CC=C1",
+            "InChI=1S/C4H10/c1-3-4-2;y",   # stem shared with #1 if resident
+            "benzene+toluene+xylene!!",
+            "InChI=1S/C4H10/c1-3-4-2;z",
+        ]
+        futs = [on.submit(p, lead=False) for p in prompts]
+        on._maybe_lead()
+        got = [f.result(timeout=300).token_ids for f in futs]
+        want = [off.generate([p])[0].token_ids for p in prompts]
+        assert got == want
+        assert on.counters()["pfx_evictions"] > 0, "pressure never reclaimed"
+        on.check()
+    finally:
+        on.close()
+        off.close()
+
+
+def test_close_fails_queued_with_engine_closed(tiny):
+    cfg, params = tiny
+    eng = ContinuousEngine(
+        cfg, params, _spec(), ServeConfig(max_new_tokens=4, max_len=MAX_LEN)
+    )
+    futs = [eng.submit(t, lead=False) for t in ("ab", "cd", "ef")]
+    eng.close()                             # no drain: nobody ever led
+    for f in futs:
+        with pytest.raises(EngineClosed, match="never admitted"):
+            f.result(timeout=60)
+    assert eng.stats.cancelled == 3
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit("xy")
+
+
+def test_close_drain_serves_everything(tiny):
+    cfg, params = tiny
+    eng = ContinuousEngine(
+        cfg, params, _spec(), ServeConfig(max_new_tokens=4, max_len=MAX_LEN)
+    )
+    futs = [eng.submit(t, lead=False) for t in ("ab", "cd", "ef")]
+    eng.close(drain=True)
+    for f in futs:
+        assert len(f.result(timeout=60).token_ids) >= 1
+    assert eng.stats.completed == 3 and eng.stats.cancelled == 0
+
+
+# ---------------------------------------------------------------------------
+# sampling in continuous mode
+# ---------------------------------------------------------------------------
+
+def test_sampling_independent_of_lane_composition(tiny):
+    cfg, params = tiny
+    scfg = ServeConfig(
+        max_new_tokens=10, max_len=MAX_LEN, greedy=False,
+        temperature=0.9, top_k=20,
+    )
+    solo = ContinuousEngine(cfg, params, _spec(), scfg)
+    packed = ContinuousEngine(cfg, params, _spec(), scfg)
+    try:
+        want = solo.submit("InChI=1S/C4", seed=7).result(timeout=300).token_ids
+        # same request sharing the batch with different co-residents (and
+        # a different admission order) must reproduce exactly
+        futs = [
+            packed.submit("benzene", seed=1, lead=False),
+            packed.submit("InChI=1S/C4", seed=7, lead=False),
+            packed.submit("xylene!", seed=2, lead=False),
+        ]
+        packed._maybe_lead()
+        got = futs[1].result(timeout=300).token_ids
+        assert got == want, "sampled tokens depend on lane composition"
+        # distinct seeds on the same prompt diverge (overwhelmingly)
+        other = packed.submit("InChI=1S/C4", seed=8).result(timeout=300)
+        assert isinstance(other.token_ids, list)
+    finally:
+        solo.close()
+        packed.close()
+
+
+def test_sampling_seed_reproducible_and_greedy_default(tiny):
+    cfg, params = tiny
+    scfg = ServeConfig(
+        max_new_tokens=8, max_len=MAX_LEN, greedy=False, temperature=1.2,
+    )
+    eng = ContinuousEngine(cfg, params, _spec(), scfg)
+    try:
+        a = eng.submit("smiles:CC", seed=3).result(timeout=300).token_ids
+        b = eng.submit("smiles:CC", seed=3).result(timeout=300).token_ids
+        assert a == b, "same (prompt, seed) must reproduce"
+    finally:
+        eng.close()
+    # greedy stays the default and ignores sampling knobs
+    assert ServeConfig().greedy and ServeConfig().top_k == 0
